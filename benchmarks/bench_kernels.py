@@ -1,0 +1,91 @@
+"""Kernel microbenches: Pallas (interpret) vs pure-jnp reference.
+
+On this CPU container interpret-mode timings measure the Python interpreter,
+not the TPU — so the REPORTED metric is (a) correctness deltas and (b) the
+jnp-reference throughput, plus the analytic VMEM/roofline characteristics of
+each kernel's blocking (what you'd check before burning TPU time).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import k2tree
+from repro.core.k2tree import K2Meta, hybrid_ks
+from repro.kernels import ref
+
+from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
+
+
+def _t(fn, *a, n=5):
+    jax.block_until_ready(fn(*a))
+    t0 = time.perf_counter()
+    for _ in range(n):
+        r = fn(*a)
+    jax.block_until_ready(r)
+    return (time.perf_counter() - t0) / n
+
+
+def run():
+    rng = np.random.default_rng(0)
+    rows = []
+
+    # popcount: ref throughput + analytic TPU roofline occupancy
+    w = jnp.asarray(rng.integers(0, 2**32, (4096, 512), dtype=np.uint32))
+    t = _t(jax.jit(ref.popcount_ref), w)
+    nbytes = w.size * 4 * 2
+    rows.append(("popcount", t * 1e3, f"{nbytes/t/1e9:.1f} GB/s cpu; "
+                 f"tpu mem-bound floor {nbytes/HBM_BW*1e6:.1f} us"))
+
+    # k2_check: batched point queries
+    meta = K2Meta(hybrid_ks(100_000))
+    r = rng.integers(0, 100_000, 100_000)
+    c = rng.integers(0, 100_000, 100_000)
+    tree = k2tree.build(r, c, meta)
+    q = 65_536
+    qr = jnp.asarray(rng.integers(0, 100_000, q), jnp.int32)
+    qc = jnp.asarray(rng.integers(0, 100_000, q), jnp.int32)
+    f = jax.jit(lambda qr, qc: ref.k2_check_ref(
+        meta, qr, qc, tree.t.words, tree.t.rank_blocks, tree.l.words,
+        tree.ones_before, tree.level_start))
+    t = _t(f, qr, qc)
+    rows.append(("k2_check", t * 1e3,
+                 f"{q/t/1e6:.1f} Mqueries/s cpu ({meta.n_levels} levels, "
+                 f"arena {int(tree.t.words.size+tree.l.words.size)*4/1024:.0f} KiB -> VMEM-resident)"))
+
+    # sorted_intersect
+    a = jnp.asarray(np.sort(rng.choice(10**7, 2**16, replace=False)).astype(np.int32))
+    b = jnp.asarray(np.sort(rng.choice(10**7, 2**18, replace=False)).astype(np.int32))
+    f = jax.jit(ref.sorted_intersect_mask_ref)
+    t = _t(f, a, b)
+    rows.append(("sorted_intersect", t * 1e3, f"{a.size/t/1e6:.1f} Mlanes/s cpu"))
+
+    # block_spmm: masked vs dense flops at 25% occupancy
+    M = K = 1024; D = 512
+    mask = (rng.random((M // 128, K // 128)) < 0.25).astype(np.int32)
+    A = jnp.asarray((rng.random((M, K)) < 0.05).astype(np.float32))
+    X = jnp.asarray(rng.standard_normal((K, D)).astype(np.float32))
+    f = jax.jit(lambda m, a, x: ref.block_spmm_ref(m, a, x))
+    t = _t(f, jnp.asarray(mask), A, X)
+    dense_flops = 2 * M * K * D
+    skipped = 1 - mask.mean()
+    rows.append(("block_spmm", t * 1e3,
+                 f"{dense_flops/t/1e9:.1f} GFLOP/s cpu dense-equiv; mask skips "
+                 f"{skipped*100:.0f}% of tiles -> tpu compute floor "
+                 f"{dense_flops*(1-skipped)/PEAK_FLOPS_BF16*1e6:.1f} us"))
+    return rows
+
+
+def main(csv=print):
+    csv("# kernel microbenches (cpu reference timings + tpu analytic floors)")
+    csv("kernel,ms_per_call,derived")
+    for name, ms, d in run():
+        csv(f"{name},{ms:.3f},{d}")
+
+
+if __name__ == "__main__":
+    main()

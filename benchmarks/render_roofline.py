@@ -1,0 +1,75 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from results/dryrun JSONs.
+
+    PYTHONPATH=src python -m benchmarks.render_roofline [--dir results/dryrun]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+
+
+def load(d):
+    rows = []
+    for f in sorted(glob.glob(f"{d}/*.json")):
+        r = json.load(open(f))
+        if r.get("ok"):
+            rows.append(r)
+    return rows
+
+
+def md_table(rows, mesh):
+    out = [
+        "| arch:shape | bottleneck | t_compute | t_memory | t_collective "
+        "| useful FLOPs | roofline | HBM/dev | CPU-artifact |",
+        "|---|---|---:|---:|---:|---:|---:|---:|---:|",
+    ]
+    for r in sorted(rows, key=lambda r: r["name"]):
+        if r["mesh"] != mesh:
+            continue
+        art = r.get("cpu_bf16_upcast_artifact_bytes", 0)
+        out.append(
+            f"| {r['name']} | **{r['bottleneck']}** "
+            f"| {r['t_compute']*1e3:.2f} ms | {r['t_memory']*1e3:.2f} ms "
+            f"| {r['t_collective']*1e3:.2f} ms "
+            f"| {r['useful_flops_frac']*100:.1f}% | {r['roofline_frac']*100:.1f}% "
+            f"| {r['peak_mem_bytes']/2**30:.2f} G | {art/2**30:.1f} G |"
+        )
+    return "\n".join(out)
+
+
+def md_multipod(rows):
+    out = [
+        "| arch:shape | 16x16 ok | 2x16x16 ok | x-pod wire/step (2x16x16) | HBM/dev 512c |",
+        "|---|---|---|---:|---:|",
+    ]
+    by = {}
+    for r in rows:
+        by.setdefault(r["name"], {})[r["mesh"]] = r
+    for name, d in sorted(by.items()):
+        a, b = d.get("16x16"), d.get("2x16x16")
+        wire = f"{b['wire_bytes_per_dev']/2**20:.1f} MiB" if b else "—"
+        hbm = f"{b['peak_mem_bytes']/2**30:.2f} G" if b else "—"
+        out.append(
+            f"| {name} | {'✓' if a else '✗'} | {'✓' if b else '✗'} | {wire} | {hbm} |"
+        )
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    args = ap.parse_args()
+    rows = load(args.dir)
+    n16 = sum(1 for r in rows if r["mesh"] == "16x16")
+    n512 = sum(1 for r in rows if r["mesh"] == "2x16x16")
+    print(f"## cells: {n16} single-pod + {n512} multi-pod compiled OK\n")
+    print("### single-pod (16x16 = 256 chips) roofline\n")
+    print(md_table(rows, "16x16"))
+    print("\n### multi-pod summary\n")
+    print(md_multipod(rows))
+
+
+if __name__ == "__main__":
+    main()

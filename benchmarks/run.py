@@ -1,0 +1,65 @@
+"""Benchmark harness: one module per paper table + kernel microbenches.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+
+Emits CSV blocks per table (the EXPERIMENTS.md §Paper-validation source).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="smaller datasets")
+    args = ap.parse_args()
+
+    from benchmarks import bench_compression, bench_joins, bench_kernels, bench_patterns
+
+    t0 = time.time()
+    print("=" * 72)
+    if args.fast:
+        print("# Table 2 analogue: compression (bits/triple, ID space)")
+        print("dataset,triples,preds,k2,raw,vertical,sextuple,x_vs_vertical,x_vs_sextuple")
+        for r in bench_compression.run(n_triples=30_000, datasets=("geonames", "dbtune")):
+            print(
+                f"{r['dataset']},{r['triples']},{r['preds']},"
+                f"{r['k2_bits_per_triple']:.2f},{r['raw_bits_per_triple']:.0f},"
+                f"{r['vertical_bits_per_triple']:.0f},{r['sextuple_bits_per_triple']:.2f},"
+                f"{r['vs_vertical']:.1f},{r['vs_sextuple']:.1f}"
+            )
+    else:
+        bench_compression.main()
+    print("=" * 72)
+    bench_patterns.main() if not args.fast else _patterns_fast()
+    print("=" * 72)
+    bench_joins.main() if not args.fast else _joins_fast()
+    print("=" * 72)
+    bench_kernels.main()
+    print("=" * 72)
+    print(f"# total {time.time()-t0:.0f}s")
+
+
+def _patterns_fast():
+    from benchmarks import bench_patterns
+
+    print("# Table 3 analogue: ms/pattern (k2 vs vertical tables)")
+    print("pattern,k2_ms,vertical_ms,speedup")
+    for k, (a, b) in bench_patterns.run(n_triples=30_000, n_preds=16, n_queries=20).items():
+        print(f"{k},{a:.3f},{b:.3f},{b/a:.1f}" if b == b else f"{k},{a:.4f},n/a,n/a")
+
+
+def _joins_fast():
+    from benchmarks import bench_joins
+
+    print("# Table 4 analogue: ms/query by join category")
+    print("category,ms_per_query")
+    for k, v in bench_joins.run(n_triples=20_000, n_preds=12, n_each=5).items():
+        print(f"{k},{v:.2f}")
+
+
+if __name__ == "__main__":
+    main()

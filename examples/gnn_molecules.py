@@ -1,0 +1,66 @@
+"""Train an equivariant GNN (EGNN or MACE) on batched molecule graphs.
+
+    PYTHONPATH=src python examples/gnn_molecules.py --arch egnn --steps 50
+
+Shows the GNN substrate end-to-end: point clouds -> kNN graphs ->
+segment-sum message passing -> per-graph energy regression, with the same
+Trainer (checkpoints, watchdog) as the LM path.
+"""
+
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get
+from repro.data import graphs as G
+from repro.launch.programs import GNN_MODULES
+from repro.train import optim
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="egnn", choices=sorted(GNN_MODULES))
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default="ckpt/gnn_mol")
+    args = ap.parse_args()
+
+    spec = get(args.arch)
+    mod = GNN_MODULES[args.arch]
+    cfg = spec.smoke_cfg
+    if hasattr(cfg, "in_dim"):
+        cfg = dataclasses.replace(cfg, in_dim=8, out_dim=1)
+
+    params = mod.init(cfg, jax.random.PRNGKey(0))
+    print(f"{cfg.name}: {sum(x.size for x in jax.tree.leaves(params))/1e3:.1f}K params")
+
+    i = [0]
+
+    def batches():
+        while True:
+            b = G.molecule_batch(args.batch, 8, 16, seed=i[0])
+            i[0] += 1
+            yield jax.tree.map(
+                lambda x: jnp.asarray(x) if isinstance(x, np.ndarray) else x, b
+            )
+
+    tr = Trainer(
+        TrainerConfig(ckpt_dir=args.ckpt_dir, ckpt_every=100, log_every=10),
+        lambda p, b: mod.loss_fn(cfg, p, b),
+        optim.adamw(3e-3),
+        params,
+    )
+    hist = tr.run(batches(), args.steps)
+    print(f"energy MSE: {hist[0]['loss']:.4f} -> {hist[-1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Quickstart: N3 text -> dictionary -> k²-triples store -> SPARQL patterns.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core import engine, k2triples
+from repro.data import rdf
+
+N3 = """
+<http://ex/alice>   <http://ex/knows>    <http://ex/bob> .
+<http://ex/alice>   <http://ex/knows>    <http://ex/carol> .
+<http://ex/bob>     <http://ex/knows>    <http://ex/carol> .
+<http://ex/carol>   <http://ex/worksAt>  <http://ex/acme> .
+<http://ex/bob>     <http://ex/worksAt>  <http://ex/acme> .
+<http://ex/acme>    <http://ex/locatedIn> <http://ex/berlin> .
+"""
+
+
+def main() -> None:
+    triples = rdf.parse_n3(N3)
+    store = k2triples.from_string_triples(triples)
+    d = store.dictionary
+    E = engine.Engine(store, cap=64)
+    print(
+        f"store: {store.n_triples} triples, {store.n_preds} predicates, "
+        f"matrix side {store.meta.side}, structure {store.stats.total_bits} bits "
+        f"({store.stats.total_bits / store.n_triples:.1f} bits/triple)"
+    )
+
+    alice = d.encode_subject("http://ex/alice")
+    knows = d.encode_predicate("http://ex/knows")
+    works = d.encode_predicate("http://ex/worksAt")
+    acme = d.encode_object("http://ex/acme")
+
+    # (S, P, ?O): who does alice know?
+    out = E.pattern(alice, knows, None)
+    print("alice knows:", [d.decode_object(int(o)) for o in out])
+
+    # (?S, P, O): who works at acme?
+    out = E.pattern(None, works, acme)
+    print("works at acme:", [d.decode_subject(int(s)) for s in out])
+
+    # (S, ?P, ?O): everything about alice
+    out = E.pattern(alice, None, None)
+    for p, objs in out.items():
+        print(f"alice --{d.decode_predicate(p)}--> ",
+              [d.decode_object(int(o)) for o in objs])
+
+    # join A (SO cross-join): ?X such that alice knows ?X and ?X works at acme
+    xs = E.join("A", p1=knows, c1=alice, vpos1="o", p2=works, c2=acme, vpos2="s")
+    print("alice knows ∩ works-at-acme:", [d.decode_object(int(x)) for x in xs])
+
+
+if __name__ == "__main__":
+    main()

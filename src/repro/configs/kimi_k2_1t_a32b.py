@@ -1,0 +1,40 @@
+"""kimi-k2-1t-a32b — trillion-param MoE, 384 experts top-8.
+[arXiv:2501.kimi2; unverified]
+
+Memory arithmetic that drives the optimizer/dtype choices (v5e, 16G HBM,
+512 chips): AdamW f32 state = 12 B/param -> 12 TB (23 G/chip, impossible);
+bf16 params + Adafactor factored state ≈ 2 TB + ~0 -> 4 G/chip params,
+grads bf16 transient 4 G/chip.  See EXPERIMENTS.md §Dry-run for the
+measured memory_analysis.
+"""
+
+from repro.configs import base
+from repro.models.transformer import MoECfg, TransformerCfg
+
+CFG = TransformerCfg(
+    name="kimi-k2-1t-a32b",
+    n_layers=61, d_model=7168, n_heads=64, n_kv_heads=8, d_head=112,
+    d_ff=2048,  # per-expert ff
+    vocab=163_840,
+    moe=MoECfg(n_experts=384, top_k=8, d_ff_expert=2048, capacity_factor=1.25),
+)
+
+SMOKE = TransformerCfg(
+    name="kimi-k2-smoke",
+    n_layers=2, d_model=64, n_heads=8, n_kv_heads=2, d_head=8,
+    d_ff=32, vocab=128, chunk_q=8, chunk_kv=16,
+    moe=MoECfg(n_experts=8, top_k=2, d_ff_expert=32),
+)
+
+base.register(
+    base.ArchSpec(
+        arch_id="kimi-k2-1t-a32b",
+        family="lm",
+        cfg=CFG,
+        smoke_cfg=SMOKE,
+        shapes=base.lm_shapes(),
+        optimizer="adafactor",
+        param_dtype="bfloat16",
+        source="arXiv:2501.kimi2; unverified",
+    )
+)

@@ -1,0 +1,168 @@
+"""The paper's 4-range Dictionary mapping (Fig. 2, following BitMat).
+
+Terms are split into four lexicographically-sorted categories:
+
+  * SO — terms playing BOTH subject and object roles -> IDs [1, |SO|]
+  * S  — subject-only terms                          -> IDs [|SO|+1, |SO|+|S|]
+  * O  — object-only terms                           -> IDs [|SO|+1, |SO|+|O|]
+  * P  — predicates                                  -> IDs [1, |P|]
+
+so that subject/object cross-joins land in the shared [1,|SO|]² submatrix.
+IDs are 1-based as in the paper; matrix coordinates are (id - 1).
+
+The paper scopes dictionary *compression* out; we keep the mapping exact and
+additionally ship a front-coded string pool (``FrontCodedStrings``) used by the
+end-to-end examples, so the system is runnable on raw N3-ish input.
+"""
+
+from __future__ import annotations
+
+import bisect
+import dataclasses
+from typing import Iterable, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class TripleDictionary:
+    """Immutable term <-> ID mapping with the paper's four ranges."""
+
+    so_terms: tuple[str, ...]  # sorted; IDs 1..|SO|
+    s_terms: tuple[str, ...]  # sorted; IDs |SO|+1 ..
+    o_terms: tuple[str, ...]  # sorted; IDs |SO|+1 ..
+    p_terms: tuple[str, ...]  # sorted; IDs 1..|P|
+
+    # ---- sizes -----------------------------------------------------------
+    @property
+    def n_so(self) -> int:
+        return len(self.so_terms)
+
+    @property
+    def n_subjects(self) -> int:  # total distinct subjects
+        return self.n_so + len(self.s_terms)
+
+    @property
+    def n_objects(self) -> int:  # total distinct objects
+        return self.n_so + len(self.o_terms)
+
+    @property
+    def n_preds(self) -> int:
+        return len(self.p_terms)
+
+    @property
+    def matrix_extent(self) -> int:
+        """Rows/cols the square adjacency matrices must cover."""
+        return max(self.n_subjects, self.n_objects, 1)
+
+    # ---- encode ----------------------------------------------------------
+    def encode_subject(self, term: str) -> int:
+        i = bisect.bisect_left(self.so_terms, term)
+        if i < len(self.so_terms) and self.so_terms[i] == term:
+            return i + 1
+        j = bisect.bisect_left(self.s_terms, term)
+        if j < len(self.s_terms) and self.s_terms[j] == term:
+            return self.n_so + j + 1
+        raise KeyError(f"unknown subject: {term!r}")
+
+    def encode_object(self, term: str) -> int:
+        i = bisect.bisect_left(self.so_terms, term)
+        if i < len(self.so_terms) and self.so_terms[i] == term:
+            return i + 1
+        j = bisect.bisect_left(self.o_terms, term)
+        if j < len(self.o_terms) and self.o_terms[j] == term:
+            return self.n_so + j + 1
+        raise KeyError(f"unknown object: {term!r}")
+
+    def encode_predicate(self, term: str) -> int:
+        j = bisect.bisect_left(self.p_terms, term)
+        if j < len(self.p_terms) and self.p_terms[j] == term:
+            return j + 1
+        raise KeyError(f"unknown predicate: {term!r}")
+
+    # ---- decode ----------------------------------------------------------
+    def decode_subject(self, sid: int) -> str:
+        if 1 <= sid <= self.n_so:
+            return self.so_terms[sid - 1]
+        return self.s_terms[sid - self.n_so - 1]
+
+    def decode_object(self, oid: int) -> str:
+        if 1 <= oid <= self.n_so:
+            return self.so_terms[oid - 1]
+        return self.o_terms[oid - self.n_so - 1]
+
+    def decode_predicate(self, pid: int) -> str:
+        return self.p_terms[pid - 1]
+
+    def encode_triples(
+        self, triples: Iterable[tuple[str, str, str]]
+    ) -> np.ndarray:
+        """-> int64[N, 3] of 1-based (s, p, o) IDs."""
+        out = [
+            (self.encode_subject(s), self.encode_predicate(p), self.encode_object(o))
+            for (s, p, o) in triples
+        ]
+        return np.asarray(out, dtype=np.int64).reshape(-1, 3)
+
+
+def build_dictionary(triples: Sequence[tuple[str, str, str]]) -> TripleDictionary:
+    """Classify every term into SO / S / O / P and sort each class."""
+    subjects = {t[0] for t in triples}
+    objects = {t[2] for t in triples}
+    preds = {t[1] for t in triples}
+    so = subjects & objects
+    return TripleDictionary(
+        so_terms=tuple(sorted(so)),
+        s_terms=tuple(sorted(subjects - so)),
+        o_terms=tuple(sorted(objects - so)),
+        p_terms=tuple(sorted(preds)),
+    )
+
+
+# ---------------------------------------------------------------------------
+# front-coded string pool (examples-only; compression of the Dictionary is
+# explicitly out of the paper's scope)
+# ---------------------------------------------------------------------------
+
+
+class FrontCodedStrings:
+    """Sorted string list, front-coded in buckets: (shared-prefix-len, suffix)."""
+
+    def __init__(self, terms: Sequence[str], bucket: int = 8):
+        self.bucket = bucket
+        self._heads: list[str] = []
+        self._blob = bytearray()
+        self._offsets: list[int] = []
+        prev = ""
+        for i, t in enumerate(terms):
+            if i % bucket == 0:
+                self._heads.append(t)
+                self._offsets.append(len(self._blob))
+                prev = t
+            else:
+                lcp = 0
+                m = min(len(prev), len(t))
+                while lcp < m and prev[lcp] == t[lcp]:
+                    lcp += 1
+                enc = t[lcp:].encode()
+                self._blob += lcp.to_bytes(2, "little") + len(enc).to_bytes(2, "little") + enc
+                prev = t
+        self.n = len(terms)
+
+    def __len__(self) -> int:
+        return self.n
+
+    def __getitem__(self, idx: int) -> str:
+        b, r = divmod(idx, self.bucket)
+        cur = self._heads[b]
+        pos = self._offsets[b]
+        for _ in range(r):
+            lcp = int.from_bytes(self._blob[pos : pos + 2], "little")
+            ln = int.from_bytes(self._blob[pos + 2 : pos + 4], "little")
+            suf = self._blob[pos + 4 : pos + 4 + ln].decode()
+            cur = cur[:lcp] + suf
+            pos += 4 + ln
+        return cur
+
+    def size_bytes(self) -> int:
+        return sum(len(h.encode()) for h in self._heads) + len(self._blob)

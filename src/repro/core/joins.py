@@ -1,0 +1,186 @@
+"""Join categories A–F over triple patterns (paper §k²-triples, Fig. 4).
+
+A join query = two triple patterns sharing one variable ?X which sits in the
+subject or object position of each pattern (SS / OO / SO joins).  The six
+categories follow the paper:
+
+  A — both predicates bounded, non-join positions bound     -> list ∩ list
+  B — one unbounded predicate                               -> list ∩ each of P lists
+  C — both predicates unbounded                             -> union ∩ union
+  D — bounded predicates, one non-join position unbounded   -> resolve + re-bind
+  E — D with one unbounded predicate                        -> D per predicate
+  F — D with two unbounded predicates                       -> E per predicate
+
+Every function is jit-able: inputs are scalar IDs (1-based), outputs are
+fixed-capacity IdSet / JoinPairs with validity masks.  ``vpos`` ∈ {"s","o"}
+names which position of a pattern holds the join variable; the SS/OO/SO kind
+is implied by (vpos1, vpos2).  Cross (SO) joins rely on the dictionary's
+shared [1,|SO|] range — IDs are directly comparable.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import k2forest, sortedset
+from repro.core.k2forest import K2Forest
+from repro.core.k2tree import K2Meta
+from repro.core.sortedset import IdSet, SENTINEL
+
+
+class JoinPairs(NamedTuple):
+    """(X, Y) bindings: Y lists hang off each X lane (and optionally preds)."""
+
+    x_ids: jax.Array  # int32[..., capx]
+    x_valid: jax.Array  # bool[..., capx]
+    y_ids: jax.Array  # int32[..., capx, capy]
+    y_valid: jax.Array  # bool[..., capx, capy]
+    overflow: jax.Array  # bool[]
+
+
+# ---------------------------------------------------------------------------
+# pattern side-lists (the paper's direct / reverse neighbors)
+# ---------------------------------------------------------------------------
+
+
+def _side_list(meta, f, p, const, vpos: str, cap: int) -> IdSet:
+    """Sorted candidate values of the join variable for one pattern.
+
+    (?X, P, O): reverse neighbors (column scan).  (S, P, ?X): direct (row).
+    IDs returned 1-based.
+    """
+    p = jnp.asarray(p, jnp.int32) - 1
+    c = jnp.asarray(const, jnp.int32) - 1
+    if vpos == "s":
+        r = k2forest.col_scan(meta, f, p, c, cap)
+    else:
+        r = k2forest.row_scan(meta, f, p, c, cap)
+    return sortedset.from_result(
+        jnp.where(r.valid, r.ids + 1, SENTINEL), r.valid, r.count, r.overflow
+    )
+
+
+def _side_list_all_preds(meta, f, const, vpos: str, cap: int):
+    """-> (ids[P,cap], valid[P,cap], overflow) sorted within each predicate."""
+    c = jnp.asarray(const, jnp.int32) - 1
+    if vpos == "s":
+        r = k2forest.col_scan_all_preds(meta, f, c, cap)
+    else:
+        r = k2forest.row_scan_all_preds(meta, f, c, cap)
+    ids = jnp.where(r.valid, r.ids + 1, SENTINEL)
+    return ids, r.valid, r.overflow.any()
+
+
+# ---------------------------------------------------------------------------
+# categories A–C: both non-join positions bound
+# ---------------------------------------------------------------------------
+
+
+def join_a(meta, f, p1, c1, vpos1: str, p2, c2, vpos2: str, cap: int) -> IdSet:
+    """(?X,P1,O1)(?X,P2,O2)-style: two bounded patterns, intersect."""
+    a = _side_list(meta, f, p1, c1, vpos1, cap)
+    b = _side_list(meta, f, p2, c2, vpos2, cap)
+    return sortedset.intersect(a, b)
+
+
+class PerPredSets(NamedTuple):
+    ids: jax.Array  # int32[P, cap]
+    valid: jax.Array  # bool[P, cap]
+    preds: jax.Array  # int32[P] 1-based predicate ids
+    overflow: jax.Array
+
+
+def join_b(meta, f, p1, c1, vpos1: str, c2, vpos2: str, cap: int) -> PerPredSets:
+    """Pattern 2 has unbounded predicate: bounded side first, then ∩ per pred."""
+    a = _side_list(meta, f, p1, c1, vpos1, cap)
+    ids2, valid2, ovf2 = _side_list_all_preds(meta, f, c2, vpos2, cap)
+
+    def one(ids_p, valid_p):
+        b = IdSet(ids_p, valid_p, valid_p.sum().astype(jnp.int32), jnp.asarray(False))
+        r = sortedset.intersect(a, b)
+        return r.ids, r.valid
+
+    ids, valid = jax.vmap(one)(ids2, valid2)
+    P = f.n_preds
+    return PerPredSets(
+        ids, valid, jnp.arange(1, P + 1, dtype=jnp.int32), a.overflow | ovf2
+    )
+
+
+def join_c(meta, f, c1, vpos1: str, c2, vpos2: str, cap: int) -> IdSet:
+    """Both predicates unbounded: union per side, intersect the unions."""
+    ids1, valid1, ovf1 = _side_list_all_preds(meta, f, c1, vpos1, cap)
+    ids2, valid2, ovf2 = _side_list_all_preds(meta, f, c2, vpos2, cap)
+    u1 = sortedset.union_rows(ids1, valid1, cap, ovf1)
+    u2 = sortedset.union_rows(ids2, valid2, cap, ovf2)
+    return sortedset.intersect(u1, u2)
+
+
+# ---------------------------------------------------------------------------
+# categories D–F: pattern 2 carries an extra unbounded variable ?Y
+# ---------------------------------------------------------------------------
+
+
+def _rebind_batch(meta, f, preds, xs, vpos2: str, cap_y: int):
+    """Resolve pattern-2 for every (pred, X) pair; X bound into vpos2."""
+    if vpos2 == "s":  # (X, P2, ?Y): row scans
+        r = k2forest.row_scan_batch(meta, f, preds - 1, xs - 1, cap_y)
+    else:  # (?Y, P2, X): column scans
+        r = k2forest.col_scan_batch(meta, f, preds - 1, xs - 1, cap_y)
+    return jnp.where(r.valid, r.ids + 1, SENTINEL), r.valid, r.overflow.any()
+
+
+def join_d(
+    meta, f, p1, c1, vpos1: str, p2, vpos2: str, cap_x: int, cap_y: int
+) -> JoinPairs:
+    """(?X,P1,O1)(?Y,P2,?X)-style: resolve X list, re-bind into pattern 2.
+
+    vpos2 names the position of **?X** in pattern 2; ?Y takes the other one.
+    """
+    a = _side_list(meta, f, p1, c1, vpos1, cap_x)
+    xs = jnp.where(a.valid, a.ids, 1)  # clamp invalid lanes to a safe id
+    preds = jnp.full((cap_x,), jnp.asarray(p2, jnp.int32))
+    y_ids, y_valid, ovf = _rebind_batch(meta, f, preds, xs, vpos2, cap_y)
+    y_valid = y_valid & a.valid[:, None]
+    return JoinPairs(a.ids, a.valid, y_ids, y_valid, a.overflow | ovf)
+
+
+def join_e(
+    meta, f, p1, c1, vpos1: str, vpos2: str, cap_x: int, cap_y: int
+) -> JoinPairs:
+    """D with pattern-2 predicate unbounded: repeat for every predicate."""
+    a = _side_list(meta, f, p1, c1, vpos1, cap_x)
+    xs = jnp.where(a.valid, a.ids, 1)
+    P = f.n_preds
+
+    def per_pred(p):
+        preds = jnp.full((cap_x,), p, jnp.int32)
+        y_ids, y_valid, ovf = _rebind_batch(meta, f, preds, xs, vpos2, cap_y)
+        return y_ids, y_valid & a.valid[:, None], ovf
+
+    y_ids, y_valid, ovf = jax.vmap(per_pred)(jnp.arange(1, P + 1, dtype=jnp.int32))
+    x_ids = jnp.broadcast_to(a.ids, (P, cap_x))
+    x_valid = jnp.broadcast_to(a.valid, (P, cap_x))
+    return JoinPairs(x_ids, x_valid, y_ids, y_valid, a.overflow | ovf.any())
+
+
+def join_f(meta, f, c1, vpos1: str, vpos2: str, cap_x: int, cap_y: int) -> JoinPairs:
+    """Both predicates unbounded: union X over predicates, then E's re-bind."""
+    ids1, valid1, ovf1 = _side_list_all_preds(meta, f, c1, vpos1, cap_x)
+    u = sortedset.union_rows(ids1, valid1, cap_x, ovf1)
+    xs = jnp.where(u.valid, u.ids, 1)
+    P = f.n_preds
+
+    def per_pred(p):
+        preds = jnp.full((cap_x,), p, jnp.int32)
+        y_ids, y_valid, ovf = _rebind_batch(meta, f, preds, xs, vpos2, cap_y)
+        return y_ids, y_valid & u.valid[:, None], ovf
+
+    y_ids, y_valid, ovf = jax.vmap(per_pred)(jnp.arange(1, P + 1, dtype=jnp.int32))
+    x_ids = jnp.broadcast_to(u.ids, (P, cap_x))
+    x_valid = jnp.broadcast_to(u.valid, (P, cap_x))
+    return JoinPairs(x_ids, x_valid, y_ids, y_valid, u.overflow | ovf.any())

@@ -1,0 +1,316 @@
+"""K2Forest — the vertical-partitioning arena: one k²-tree per predicate.
+
+The paper keeps |P| independent k²-trees.  For a device-resident engine we
+pack them into padded 2-D word arenas ``(P, W)`` so that
+
+  * the predicate axis is shardable (``model`` axis of the production mesh —
+    vertical partitioning *is* the sharding scheme, lifted to the pod level);
+  * a batch of queries with per-query predicate ids lowers to gathers
+    ``words[pred, pos >> 5]`` — no per-query row materialization.
+
+All trees share one ``K2Meta`` (same matrix side = dictionary extent, padded
+to the hybrid-k power — exactly the paper's square-matrix construction).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitvec, k2tree
+from repro.core.k2tree import K2Meta, PairResult, QueryResult, _compact
+
+
+class K2Forest(NamedTuple):
+    t_words: jax.Array  # uint32[P, Wt]
+    t_rank: jax.Array  # int32[P, Wt]
+    l_words: jax.Array  # uint32[P, Wl]
+    ones_before: jax.Array  # int32[P, max(H-1,1)]
+    level_start: jax.Array  # int32[P, H]
+    nnz: jax.Array  # int32[P]
+
+    @property
+    def n_preds(self) -> int:
+        return self.t_words.shape[0]
+
+
+class ForestStats(NamedTuple):
+    """Honest compression accounting (padding is a layout, not a size)."""
+
+    total_bits: int  # sum over predicates of (|T| + |L|)
+    padded_bits: int  # device-arena footprint
+    per_pred_bits: np.ndarray
+    per_pred_nnz: np.ndarray
+
+
+def build_forest(
+    coords: Sequence[tuple[np.ndarray, np.ndarray]], meta: K2Meta
+) -> tuple[K2Forest, ForestStats]:
+    """Build one tree per predicate from (rows, cols) coordinate lists."""
+    hosts = [k2tree.build_host(r, c, meta) for (r, c) in coords]
+    P = len(hosts)
+    H = meta.n_levels
+    wt = max(1, max((h.t_bits.shape[0] + 31) // 32 for h in hosts))
+    wl = max(1, max((h.l_bits.shape[0] + 31) // 32 for h in hosts))
+
+    t_words = np.zeros((P, wt), np.uint32)
+    t_rank = np.zeros((P, wt), np.int32)
+    l_words = np.zeros((P, wl), np.uint32)
+    ones_before = np.zeros((P, max(H - 1, 1)), np.int32)
+    level_start = np.zeros((P, H), np.int32)
+    nnz = np.zeros((P,), np.int32)
+    bits = np.zeros((P,), np.int64)
+    for i, h in enumerate(hosts):
+        tw = bitvec.pack_bits_np(h.t_bits)
+        t_words[i, : tw.shape[0]] = tw
+        t_rank[i, : tw.shape[0]] = bitvec.rank_blocks_np(tw)
+        # padding words rank-extend so rank1 beyond the tree stays monotone
+        if tw.shape[0] < wt:
+            total = int(h.t_bits.sum())
+            t_rank[i, tw.shape[0]:] = total
+        lw = bitvec.pack_bits_np(h.l_bits)
+        l_words[i, : lw.shape[0]] = lw
+        ones_before[i, : h.ones_before.shape[0]] = h.ones_before
+        level_start[i] = h.level_start
+        nnz[i] = h.nnz
+        bits[i] = h.t_bits.shape[0] + h.l_bits.shape[0]
+
+    forest = K2Forest(
+        t_words=jnp.asarray(t_words),
+        t_rank=jnp.asarray(t_rank),
+        l_words=jnp.asarray(l_words),
+        ones_before=jnp.asarray(ones_before),
+        level_start=jnp.asarray(level_start),
+        nnz=jnp.asarray(nnz),
+    )
+    stats = ForestStats(
+        total_bits=int(bits.sum()),
+        padded_bits=int(P * (wt + wl) * 32 + t_rank.size * 32),
+        per_pred_bits=bits,
+        per_pred_nnz=nnz.copy(),
+    )
+    return forest, stats
+
+
+# ---------------------------------------------------------------------------
+# batched queries — 2-D indexed (pred travels with every lane)
+# ---------------------------------------------------------------------------
+
+
+def check(
+    meta: K2Meta, f: K2Forest, pred: jax.Array, rows: jax.Array, cols: jax.Array
+) -> jax.Array:
+    """Batched (S, P, O) over per-lane predicates -> bool[Q]."""
+    H = meta.n_levels
+    pred = pred.astype(jnp.int32)
+    rd = k2tree._row_digits(meta, rows.astype(jnp.int32))
+    cd = k2tree._row_digits(meta, cols.astype(jnp.int32))
+    alive = jnp.ones(rows.shape, dtype=jnp.bool_)
+    pos = (rd[0] * meta.ks[0] + cd[0]).astype(jnp.int32)
+    for lvl in range(H):
+        last = lvl == H - 1
+        words = f.l_words if last else f.t_words
+        bit = bitvec.get_bit_2d(words, pred, pos)
+        alive = alive & (bit == 1)
+        if not last:
+            j = bitvec.rank1_2d(f.t_words, f.t_rank, pred, pos) - f.ones_before[pred, lvl]
+            nxt = rd[lvl + 1] * meta.ks[lvl + 1] + cd[lvl + 1]
+            pos = f.level_start[pred, lvl + 1] + j * meta.radices[lvl + 1] + nxt
+            pos = jnp.where(alive, pos, 0).astype(jnp.int32)
+    return alive
+
+
+def check_all_preds(meta: K2Meta, f: K2Forest, row: jax.Array, col: jax.Array) -> jax.Array:
+    """(S, ?P, O): bool[P] — the paper's 'check the cell in every tree'."""
+    P = f.n_preds
+    preds = jnp.arange(P, dtype=jnp.int32)
+    return check(meta, f, preds, jnp.broadcast_to(row, (P,)), jnp.broadcast_to(col, (P,)))
+
+
+def _axis_scan(
+    meta: K2Meta, f: K2Forest, pred: jax.Array, fixed: jax.Array, cap: int, axis: int
+) -> QueryResult:
+    """Single-query row/col scan on predicate ``pred`` (vmap for batches)."""
+    H = meta.n_levels
+    pred = pred.astype(jnp.int32)
+    fdig = k2tree._row_digits(meta, fixed.astype(jnp.int32))
+
+    k0 = meta.ks[0]
+    sub0 = meta.subsides[0]
+    init_n = min(k0, cap)
+    j0 = jnp.arange(init_n, dtype=jnp.int32)
+    p0 = fdig[0] * k0 + j0 if axis == 0 else j0 * k0 + fdig[0]
+    pos = jnp.zeros((cap,), jnp.int32).at[:init_n].set(p0)
+    base = jnp.zeros((cap,), jnp.int32).at[:init_n].set(j0 * sub0)
+    valid = jnp.zeros((cap,), jnp.bool_).at[:init_n].set(True)
+    overflow = jnp.asarray(k0 > cap)
+
+    words0 = f.l_words if H == 1 else f.t_words
+    valid = valid & (bitvec.get_bit_2d(words0, pred, pos) == 1)
+
+    for lvl in range(H - 1):
+        last_child = lvl + 1 == H - 1
+        k = meta.ks[lvl + 1]
+        r = meta.radices[lvl + 1]
+        sub = meta.subsides[lvl + 1]
+        j = bitvec.rank1_2d(f.t_words, f.t_rank, pred, pos) - f.ones_before[pred, lvl]
+        child_base0 = f.level_start[pred, lvl + 1] + j * r
+        ch = jnp.arange(k, dtype=jnp.int32)
+        if axis == 0:
+            cpos = child_base0[:, None] + fdig[lvl + 1] * k + ch[None, :]
+        else:
+            cpos = child_base0[:, None] + ch[None, :] * k + fdig[lvl + 1]
+        cbase = base[:, None] + ch[None, :] * sub
+        wordsc = f.l_words if last_child else f.t_words
+        cbit = bitvec.get_bit_2d(wordsc, pred, jnp.where(valid[:, None], cpos, 0))
+        cvalid = valid[:, None] & (cbit == 1)
+        valid, _, ovf, (pos, base) = _compact(
+            cvalid.reshape(-1), cap, cpos.reshape(-1), cbase.reshape(-1)
+        )
+        overflow = overflow | ovf
+        pos = jnp.where(valid, pos, 0)
+
+    valid, count, ovf, (ids,) = _compact(valid, cap, base)
+    return QueryResult(ids=ids, valid=valid, count=count, overflow=overflow | ovf)
+
+
+def row_scan(meta: K2Meta, f: K2Forest, pred, row, cap: int) -> QueryResult:
+    """(S, P, ?O) — direct neighbors, ascending object id."""
+    return _axis_scan(meta, f, jnp.asarray(pred), jnp.asarray(row), cap, axis=0)
+
+
+def col_scan(meta: K2Meta, f: K2Forest, pred, col, cap: int) -> QueryResult:
+    """(?S, P, O) — reverse neighbors, ascending subject id."""
+    return _axis_scan(meta, f, jnp.asarray(pred), jnp.asarray(col), cap, axis=1)
+
+
+def row_scan_batch(meta: K2Meta, f: K2Forest, preds, rows, cap: int) -> QueryResult:
+    return jax.vmap(lambda p, r: _axis_scan(meta, f, p, r, cap, 0))(
+        jnp.asarray(preds), jnp.asarray(rows)
+    )
+
+
+def col_scan_batch(meta: K2Meta, f: K2Forest, preds, cols, cap: int) -> QueryResult:
+    return jax.vmap(lambda p, c: _axis_scan(meta, f, p, c, cap, 1))(
+        jnp.asarray(preds), jnp.asarray(cols)
+    )
+
+
+def row_scan_all_preds(meta: K2Meta, f: K2Forest, row, cap: int) -> QueryResult:
+    """(S, ?P, ?O): per-predicate object lists, result axis 0 = predicate."""
+    preds = jnp.arange(f.n_preds, dtype=jnp.int32)
+    return row_scan_batch(meta, f, preds, jnp.broadcast_to(jnp.asarray(row), (f.n_preds,)), cap)
+
+
+def col_scan_all_preds(meta: K2Meta, f: K2Forest, col, cap: int) -> QueryResult:
+    """(?S, ?P, O): per-predicate subject lists."""
+    preds = jnp.arange(f.n_preds, dtype=jnp.int32)
+    return col_scan_batch(meta, f, preds, jnp.broadcast_to(jnp.asarray(col), (f.n_preds,)), cap)
+
+
+def _axis_scan_traced(
+    meta: K2Meta, f: K2Forest, pred: jax.Array, fixed: jax.Array, axis: jax.Array, cap: int
+) -> QueryResult:
+    """Like ``_axis_scan`` but the row/col axis is a *traced* per-query flag.
+
+    This lets one compiled program serve a mixed batch of direct-neighbor
+    (S,P,?O) and reverse-neighbor (?S,P,O) scans — the serving hot path.
+    """
+    H = meta.n_levels
+    pred = pred.astype(jnp.int32)
+    is_row = (jnp.asarray(axis, jnp.int32) == 0)
+    fdig = k2tree._row_digits(meta, fixed.astype(jnp.int32))
+
+    k0 = meta.ks[0]
+    sub0 = meta.subsides[0]
+    init_n = min(k0, cap)
+    j0 = jnp.arange(init_n, dtype=jnp.int32)
+    p0 = jnp.where(is_row, fdig[0] * k0 + j0, j0 * k0 + fdig[0])
+    pos = jnp.zeros((cap,), jnp.int32).at[:init_n].set(p0)
+    base = jnp.zeros((cap,), jnp.int32).at[:init_n].set(j0 * sub0)
+    valid = jnp.zeros((cap,), jnp.bool_).at[:init_n].set(True)
+    overflow = jnp.asarray(k0 > cap)
+
+    words0 = f.l_words if H == 1 else f.t_words
+    valid = valid & (bitvec.get_bit_2d(words0, pred, pos) == 1)
+
+    for lvl in range(H - 1):
+        last_child = lvl + 1 == H - 1
+        k = meta.ks[lvl + 1]
+        r = meta.radices[lvl + 1]
+        sub = meta.subsides[lvl + 1]
+        j = bitvec.rank1_2d(f.t_words, f.t_rank, pred, pos) - f.ones_before[pred, lvl]
+        child_base0 = f.level_start[pred, lvl + 1] + j * r
+        ch = jnp.arange(k, dtype=jnp.int32)
+        cpos = child_base0[:, None] + jnp.where(
+            is_row, fdig[lvl + 1] * k + ch[None, :], ch[None, :] * k + fdig[lvl + 1]
+        )
+        cbase = base[:, None] + ch[None, :] * sub
+        wordsc = f.l_words if last_child else f.t_words
+        cbit = bitvec.get_bit_2d(wordsc, pred, jnp.where(valid[:, None], cpos, 0))
+        cvalid = valid[:, None] & (cbit == 1)
+        valid, _, ovf, (pos, base) = _compact(
+            cvalid.reshape(-1), cap, cpos.reshape(-1), cbase.reshape(-1)
+        )
+        overflow = overflow | ovf
+        pos = jnp.where(valid, pos, 0)
+
+    valid, count, ovf, (ids,) = _compact(valid, cap, base)
+    return QueryResult(ids=ids, valid=valid, count=count, overflow=overflow | ovf)
+
+
+def scan_batch_mixed(meta: K2Meta, f: K2Forest, preds, keys, axes, cap: int) -> QueryResult:
+    """Batched mixed row/col scans: axes[i]==0 -> row (S,P,?O), 1 -> col."""
+    return jax.vmap(lambda p, x, a: _axis_scan_traced(meta, f, p, x, a, cap))(
+        jnp.asarray(preds), jnp.asarray(keys), jnp.asarray(axes)
+    )
+
+
+def range_scan(meta: K2Meta, f: K2Forest, pred, cap: int) -> PairResult:
+    """(?S, P, ?O): all pairs of one predicate's matrix."""
+    H = meta.n_levels
+    pred = jnp.asarray(pred, dtype=jnp.int32)
+    k0, r0, sub0 = meta.ks[0], meta.radices[0], meta.subsides[0]
+
+    init_n = min(r0, cap)
+    d0 = jnp.arange(init_n, dtype=jnp.int32)
+    pos = jnp.zeros((cap,), jnp.int32).at[:init_n].set(d0)
+    rbase = jnp.zeros((cap,), jnp.int32).at[:init_n].set((d0 // k0) * sub0)
+    cbase = jnp.zeros((cap,), jnp.int32).at[:init_n].set((d0 % k0) * sub0)
+    valid = jnp.zeros((cap,), jnp.bool_).at[:init_n].set(True)
+    overflow = jnp.asarray(r0 > cap)
+
+    words0 = f.l_words if H == 1 else f.t_words
+    valid = valid & (bitvec.get_bit_2d(words0, pred, pos) == 1)
+
+    for lvl in range(H - 1):
+        last_child = lvl + 1 == H - 1
+        k = meta.ks[lvl + 1]
+        r = meta.radices[lvl + 1]
+        sub = meta.subsides[lvl + 1]
+        j = bitvec.rank1_2d(f.t_words, f.t_rank, pred, pos) - f.ones_before[pred, lvl]
+        child_base0 = f.level_start[pred, lvl + 1] + j * r
+        d = jnp.arange(r, dtype=jnp.int32)
+        cpos = child_base0[:, None] + d[None, :]
+        crb = rbase[:, None] + (d[None, :] // k) * sub
+        ccb = cbase[:, None] + (d[None, :] % k) * sub
+        wordsc = f.l_words if last_child else f.t_words
+        cbit = bitvec.get_bit_2d(wordsc, pred, jnp.where(valid[:, None], cpos, 0))
+        cvalid = valid[:, None] & (cbit == 1)
+        valid, _, ovf, (pos, rbase, cbase) = _compact(
+            cvalid.reshape(-1), cap, cpos.reshape(-1), crb.reshape(-1), ccb.reshape(-1)
+        )
+        overflow = overflow | ovf
+        pos = jnp.where(valid, pos, 0)
+
+    valid, count, ovf, (rows, cols) = _compact(valid, cap, rbase, cbase)
+    return PairResult(rows, cols, valid, count, overflow | ovf)
+
+
+def range_scan_all_preds(meta: K2Meta, f: K2Forest, cap: int) -> PairResult:
+    """(?S, ?P, ?O): dataset dump, axis 0 = predicate."""
+    preds = jnp.arange(f.n_preds, dtype=jnp.int32)
+    return jax.vmap(lambda p: range_scan(meta, f, p, cap))(preds)

@@ -1,0 +1,368 @@
+"""k²-tree: compressed quadtree over a sparse binary matrix (the paper's core).
+
+Construction (host, numpy): sort-based, level-order emission of the T / L bit
+arrays with the paper's hybrid arity (k=4 for the first 5 levels, then k=2).
+
+Queries (device, JAX): the paper's DFS pointer-chasing is re-formulated as
+**level-synchronous batched traversal** — a static Python loop over the (small,
+static) tree height where every level processes a whole frontier of candidate
+nodes as dense vectors: gather word, popcount-rank, compute child positions.
+All result shapes are static (``max_results`` cap + valid count + overflow
+flag) so every query lowers to one XLA program.
+
+Navigation invariant (hybrid-k generalization of Brisaboa et al. 2009):
+  * levels ``0 .. H-2`` live in T, level ``H-1`` (the matrix cells) lives in L;
+  * the j-th 1-bit (level order) of level ``l`` owns the bit slab
+    ``[j * k²_{l+1}, (j+1) * k²_{l+1})`` of level ``l+1``;
+  * ``j = rank1(T, pos) - ones_before_level[l]``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitvec
+from repro.core.bitvec import BitVec
+
+# Paper §k²-trees: "hybrid policy which uses values k=4, up to the level 5 of
+# the tree, and then k=2, for the rest ones".
+HYBRID_K4_LEVELS = 5
+
+
+def hybrid_ks(side_needed: int, k4_levels: int = HYBRID_K4_LEVELS) -> tuple[int, ...]:
+    """Per-level arities covering at least ``side_needed`` (paper's hybrid)."""
+    ks: list[int] = []
+    side = 1
+    while side < side_needed:
+        ks.append(4 if len(ks) < k4_levels else 2)
+        side *= ks[-1]
+    return tuple(ks) if ks else (2,)
+
+
+@dataclasses.dataclass(frozen=True)
+class K2Meta:
+    """Static (hashable) tree geometry, shared by every tree of a forest."""
+
+    ks: tuple[int, ...]  # per-level arity, len == n_levels
+
+    @property
+    def n_levels(self) -> int:
+        return len(self.ks)
+
+    @property
+    def side(self) -> int:
+        return int(np.prod(self.ks))
+
+    @property
+    def radices(self) -> tuple[int, ...]:
+        return tuple(k * k for k in self.ks)
+
+    @property
+    def subsides(self) -> tuple[int, ...]:
+        """Submatrix side of a node at each level (after that level's split)."""
+        out, s = [], self.side
+        for k in self.ks:
+            s //= k
+            out.append(s)
+        return tuple(out)  # subsides[-1] == 1 (cells)
+
+
+class K2Tree(NamedTuple):
+    """One compressed matrix: device arrays (meta travels separately)."""
+
+    t: BitVec
+    l: BitVec
+    ones_before: jax.Array  # int32[n_levels-1]: #1s in T before each level
+    level_start: jax.Array  # int32[n_levels]: bit offset of each level
+    #   (levels 0..H-2 offsets are into T; level_start[H-1] == 0, into L)
+    nnz: int
+
+
+# ---------------------------------------------------------------------------
+# construction (numpy, host)
+# ---------------------------------------------------------------------------
+
+
+class K2HostArrays(NamedTuple):
+    """Raw numpy arrays (pre-device) — also used by the forest packer."""
+
+    t_bits: np.ndarray  # uint8[t_len]
+    l_bits: np.ndarray  # uint8[l_len]
+    ones_before: np.ndarray  # int32[H-1]
+    level_start: np.ndarray  # int32[H]
+    nnz: int
+
+
+def build_host(rows: np.ndarray, cols: np.ndarray, meta: K2Meta) -> K2HostArrays:
+    """Sort-based level-order construction. O(nnz · H)."""
+    H = meta.n_levels
+    radices = meta.radices
+    side = meta.side
+    rows = np.asarray(rows, dtype=np.int64)
+    cols = np.asarray(cols, dtype=np.int64)
+    if rows.size and (rows.max() >= side or cols.max() >= side):
+        raise ValueError("coordinates exceed matrix side")
+
+    # mixed-radix Morton-style code, most-significant level first
+    code = np.zeros(rows.shape[0], dtype=np.int64)
+    r, c, s = rows.copy(), cols.copy(), side
+    for k in meta.ks:
+        s //= k
+        code = code * (k * k) + ((r // s) * k + (c // s))
+        r %= s
+        c %= s
+    code = np.unique(code)
+    nnz = int(code.shape[0])
+
+    # per-level sorted prefixes (the 1-nodes of each level)
+    prefixes: list[np.ndarray] = [None] * H  # type: ignore[list-item]
+    prefixes[H - 1] = code
+    for lvl in range(H - 2, -1, -1):
+        prefixes[lvl] = np.unique(prefixes[lvl + 1] // radices[lvl + 1])
+
+    level_bits: list[np.ndarray] = []
+    for lvl in range(H):
+        if lvl == 0:
+            bits = np.zeros(radices[0], dtype=np.uint8)
+            bits[prefixes[0]] = 1
+        else:
+            parent_idx = np.searchsorted(prefixes[lvl - 1], prefixes[lvl] // radices[lvl])
+            pos = parent_idx * radices[lvl] + prefixes[lvl] % radices[lvl]
+            bits = np.zeros(prefixes[lvl - 1].shape[0] * radices[lvl], dtype=np.uint8)
+            bits[pos] = 1
+        level_bits.append(bits)
+
+    t_bits = (
+        np.concatenate(level_bits[:-1]) if H > 1 else np.zeros(0, dtype=np.uint8)
+    )
+    l_bits = level_bits[-1]
+
+    lvl_lens = np.array([b.shape[0] for b in level_bits[:-1]], dtype=np.int64)
+    level_start = np.zeros(H, dtype=np.int32)
+    if H > 1:
+        level_start[1:-1] = np.cumsum(lvl_lens)[:-1].astype(np.int32)
+    level_start[H - 1] = 0  # last level indexes into L
+
+    ones = np.array([int(b.sum()) for b in level_bits[:-1]], dtype=np.int64)
+    ones_before = np.zeros(max(H - 1, 1), dtype=np.int32)
+    if H > 1:
+        ones_before[1:] = np.cumsum(ones)[:-1].astype(np.int32)
+        ones_before = ones_before[: H - 1]
+
+    return K2HostArrays(t_bits, l_bits, ones_before, level_start, nnz)
+
+
+def build(rows: np.ndarray, cols: np.ndarray, meta: K2Meta) -> K2Tree:
+    h = build_host(rows, cols, meta)
+    return K2Tree(
+        t=bitvec.bitvec_from_bits(h.t_bits),
+        l=bitvec.bitvec_from_bits(h.l_bits),
+        ones_before=jnp.asarray(h.ones_before),
+        level_start=jnp.asarray(h.level_start),
+        nnz=h.nnz,
+    )
+
+
+def size_bits(tree: K2HostArrays | K2Tree) -> int:
+    """Structure size in bits (T + L), the paper's compression metric."""
+    if isinstance(tree, K2HostArrays):
+        return int(tree.t_bits.shape[0] + tree.l_bits.shape[0])
+    return tree.t.n_bits + tree.l.n_bits
+
+
+# ---------------------------------------------------------------------------
+# queries (JAX, batched / level-synchronous)
+# ---------------------------------------------------------------------------
+
+
+def _row_digits(meta: K2Meta, v: jax.Array) -> list[jax.Array]:
+    """Per-level digit of a coordinate v along one axis (static unroll)."""
+    digs = []
+    rem = v
+    for sub in meta.subsides:
+        digs.append(rem // sub)
+        rem = rem % sub
+    return digs
+
+
+def check(meta: K2Meta, tree: K2Tree, rows: jax.Array, cols: jax.Array) -> jax.Array:
+    """Batched cell query: does (row, col) contain a 1?  -> bool[Q].
+
+    Paper pattern (S, P, O).
+    """
+    H = meta.n_levels
+    rd = _row_digits(meta, rows.astype(jnp.int32))
+    cd = _row_digits(meta, cols.astype(jnp.int32))
+    alive = jnp.ones(rows.shape, dtype=jnp.bool_)
+    pos = (rd[0] * meta.ks[0] + cd[0]).astype(jnp.int32)
+    for lvl in range(H):
+        last = lvl == H - 1
+        bv = tree.l if last else tree.t
+        bit = bitvec.get_bit(bv.words, pos)
+        alive = alive & (bit == 1)
+        if not last:
+            j = bitvec.rank1(tree.t.words, tree.t.rank_blocks, pos) - tree.ones_before[lvl]
+            nxt_digit = rd[lvl + 1] * meta.ks[lvl + 1] + cd[lvl + 1]
+            pos = tree.level_start[lvl + 1] + j * meta.radices[lvl + 1] + nxt_digit
+            pos = jnp.where(alive, pos, 0).astype(jnp.int32)
+    return alive
+
+
+class QueryResult(NamedTuple):
+    """Fixed-shape query result: ID-sorted ids, validity, count, overflow."""
+
+    ids: jax.Array  # int32[cap]   (row or column ids; garbage where ~valid)
+    valid: jax.Array  # bool[cap]
+    count: jax.Array  # int32[]    number of valid results (pre-truncation min cap)
+    overflow: jax.Array  # bool[]  True if the frontier/capacity was exceeded
+
+
+class PairResult(NamedTuple):
+    rows: jax.Array  # int32[cap]
+    cols: jax.Array  # int32[cap]
+    valid: jax.Array
+    count: jax.Array
+    overflow: jax.Array
+
+
+def _compact(valid: jax.Array, cap: int, *arrays: jax.Array):
+    """Stable-compact valid lanes to the front; returns (valid', arrays')."""
+    idx = jnp.cumsum(valid.astype(jnp.int32)) - 1
+    tgt = jnp.where(valid, idx, cap)  # invalid -> dropped (mode="drop")
+    n = jnp.minimum(valid.sum(), cap)
+    new_valid = jnp.arange(cap, dtype=jnp.int32) < n
+    outs = []
+    for a in arrays:
+        out = jnp.zeros((cap,), a.dtype).at[tgt].set(a, mode="drop")
+        outs.append(out)
+    overflow = valid.sum() > cap
+    return new_valid, n.astype(jnp.int32), overflow, outs
+
+
+def _axis_scan(
+    meta: K2Meta,
+    tree: K2Tree,
+    fixed: jax.Array,  # scalar int32 — the bound coordinate
+    cap: int,
+    axis: int,  # 0: row fixed (direct neighbors); 1: col fixed (reverse)
+) -> QueryResult:
+    """Row/column scan, level-synchronous frontier BFS with static cap.
+
+    axis=0 resolves (S, P, ?O) — all 1s in a row, ascending column order.
+    axis=1 resolves (?S, P, O) — all 1s in a column, ascending row order.
+    """
+    H = meta.n_levels
+    fixed = fixed.astype(jnp.int32)
+    fdig = _row_digits(meta, fixed)
+
+    pos = jnp.zeros((cap,), jnp.int32)
+    base = jnp.zeros((cap,), jnp.int32)  # free-axis offset of each node
+    valid = jnp.zeros((cap,), jnp.bool_)
+
+    k0 = meta.ks[0]
+    sub0 = meta.subsides[0]
+    init_n = min(k0, cap)
+    j0 = jnp.arange(init_n, dtype=jnp.int32)
+    if axis == 0:
+        p0 = fdig[0] * k0 + j0
+    else:
+        p0 = j0 * k0 + fdig[0]
+    pos = pos.at[:init_n].set(p0)
+    base = base.at[:init_n].set(j0 * sub0)
+    valid = valid.at[:init_n].set(True)
+    overflow = jnp.asarray(k0 > cap)
+
+    # test level-0 candidates immediately: frontier only ever holds 1-nodes,
+    # so capacity requirements track the matrix's true occupancy
+    bv0 = tree.l if H == 1 else tree.t
+    valid = valid & (bitvec.get_bit(bv0.words, pos) == 1)
+
+    for lvl in range(H - 1):
+        last_child = lvl + 1 == H - 1
+        k = meta.ks[lvl + 1]
+        r = meta.radices[lvl + 1]
+        sub = meta.subsides[lvl + 1]
+        j = bitvec.rank1(tree.t.words, tree.t.rank_blocks, pos) - tree.ones_before[lvl]
+        child_base0 = tree.level_start[lvl + 1] + j * r
+        # expand: (cap,) -> (cap, k) child candidates, entry-major keeps the
+        # free axis ascending => results stay ID-sorted (merge-join property)
+        ch = jnp.arange(k, dtype=jnp.int32)
+        if axis == 0:
+            cpos = child_base0[:, None] + fdig[lvl + 1] * k + ch[None, :]
+        else:
+            cpos = child_base0[:, None] + ch[None, :] * k + fdig[lvl + 1]
+        cbase = base[:, None] + ch[None, :] * sub
+        bvc = tree.l if last_child else tree.t
+        cbit = bitvec.get_bit(bvc.words, jnp.where(valid[:, None], cpos, 0))
+        cvalid = valid[:, None] & (cbit == 1)
+        valid, _, ovf, (pos, base) = _compact(
+            cvalid.reshape(-1), cap, cpos.reshape(-1), cbase.reshape(-1)
+        )
+        overflow = overflow | ovf
+        pos = jnp.where(valid, pos, 0)
+
+    valid, count, ovf, (ids,) = _compact(valid, cap, base)
+    return QueryResult(ids=ids, valid=valid, count=count, overflow=overflow | ovf)
+
+
+def row_scan(meta: K2Meta, tree: K2Tree, row: jax.Array, cap: int) -> QueryResult:
+    """(S, P, ?O): objects related to ``row``, ascending object id."""
+    return _axis_scan(meta, tree, row, cap, axis=0)
+
+
+def col_scan(meta: K2Meta, tree: K2Tree, col: jax.Array, cap: int) -> QueryResult:
+    """(?S, P, O): subjects related to ``col``, ascending subject id."""
+    return _axis_scan(meta, tree, col, cap, axis=1)
+
+
+def range_scan(meta: K2Meta, tree: K2Tree, cap: int) -> PairResult:
+    """(?S, P, ?O): every 1-cell of the matrix (Morton order), capped."""
+    H = meta.n_levels
+    k0 = meta.ks[0]
+    r0 = meta.radices[0]
+    sub0 = meta.subsides[0]
+
+    pos = jnp.zeros((cap,), jnp.int32)
+    rbase = jnp.zeros((cap,), jnp.int32)
+    cbase = jnp.zeros((cap,), jnp.int32)
+    valid = jnp.zeros((cap,), jnp.bool_)
+
+    init_n = min(r0, cap)
+    d0 = jnp.arange(init_n, dtype=jnp.int32)
+    pos = pos.at[:init_n].set(d0)
+    rbase = rbase.at[:init_n].set((d0 // k0) * sub0)
+    cbase = cbase.at[:init_n].set((d0 % k0) * sub0)
+    valid = valid.at[:init_n].set(True)
+    overflow = jnp.asarray(r0 > cap)
+
+    bv0 = tree.l if H == 1 else tree.t
+    valid = valid & (bitvec.get_bit(bv0.words, pos) == 1)
+
+    for lvl in range(H - 1):
+        last_child = lvl + 1 == H - 1
+        k = meta.ks[lvl + 1]
+        r = meta.radices[lvl + 1]
+        sub = meta.subsides[lvl + 1]
+        j = bitvec.rank1(tree.t.words, tree.t.rank_blocks, pos) - tree.ones_before[lvl]
+        child_base0 = tree.level_start[lvl + 1] + j * r
+        d = jnp.arange(r, dtype=jnp.int32)
+        cpos = child_base0[:, None] + d[None, :]
+        crb = rbase[:, None] + (d[None, :] // k) * sub
+        ccb = cbase[:, None] + (d[None, :] % k) * sub
+        bvc = tree.l if last_child else tree.t
+        cbit = bitvec.get_bit(bvc.words, jnp.where(valid[:, None], cpos, 0))
+        cvalid = valid[:, None] & (cbit == 1)
+        valid, _, ovf, (pos, rbase, cbase) = _compact(
+            cvalid.reshape(-1), cap, cpos.reshape(-1), crb.reshape(-1), ccb.reshape(-1)
+        )
+        overflow = overflow | ovf
+        pos = jnp.where(valid, pos, 0)
+
+    valid, count, ovf, (rows, cols) = _compact(valid, cap, rbase, cbase)
+    return PairResult(rows, cols, valid, count, overflow | ovf)

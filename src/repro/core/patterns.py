@@ -1,0 +1,102 @@
+"""The paper's eight SPARQL triple patterns on k²-tree primitives.
+
+Every function takes 1-based IDs (the paper's dictionary space) and returns
+1-based IDs inside fixed-shape ``QueryResult`` / ``PairResult`` contracts
+(ids, valid-mask, count, overflow) so the whole pattern layer is jit-able.
+
+Pattern -> primitive map (paper §k²-triples):
+
+  (S, P, O)     cell check on the P-th tree            -> ``spo``
+  (S, ?P, O)    cell check on every tree               -> ``s_any_o``
+  (S, P, ?O)    row scan (direct neighbors), sorted    -> ``sp_any``
+  (S, ?P, ?O)   row scan on every tree                 -> ``s_any_any``
+  (?S, P, O)    column scan (reverse neighbors)        -> ``any_po``
+  (?S, ?P, O)   column scan on every tree              -> ``any_any_o``
+  (?S, P, ?O)   full range scan of one tree            -> ``any_p_any``
+  (?S, ?P, ?O)  range scan on every tree (dump)        -> ``dump``
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import k2forest
+from repro.core.k2forest import K2Forest
+from repro.core.k2tree import K2Meta, PairResult, QueryResult
+
+
+def _ids(res: QueryResult) -> QueryResult:
+    """Shift 0-based matrix coordinates back to 1-based dictionary IDs."""
+    return res._replace(ids=jnp.where(res.valid, res.ids + 1, 0))
+
+
+def _pairs(res: PairResult) -> PairResult:
+    return res._replace(
+        rows=jnp.where(res.valid, res.rows + 1, 0),
+        cols=jnp.where(res.valid, res.cols + 1, 0),
+    )
+
+
+def spo(meta: K2Meta, f: K2Forest, s, p, o) -> jax.Array:
+    """(S, P, O) -> bool[...] (batched over leading dims of s/p/o)."""
+    s, p, o = (jnp.asarray(x, jnp.int32) for x in (s, p, o))
+    return k2forest.check(meta, f, p - 1, s - 1, o - 1)
+
+
+def s_any_o(meta: K2Meta, f: K2Forest, s, o) -> jax.Array:
+    """(S, ?P, O) -> bool[P]; index i <-> predicate i+1."""
+    s, o = jnp.asarray(s, jnp.int32), jnp.asarray(o, jnp.int32)
+    return k2forest.check_all_preds(meta, f, s - 1, o - 1)
+
+
+def sp_any(meta: K2Meta, f: K2Forest, s, p, cap: int) -> QueryResult:
+    """(S, P, ?O) -> object IDs, ascending (merge-join ready)."""
+    s, p = jnp.asarray(s, jnp.int32), jnp.asarray(p, jnp.int32)
+    return _ids(k2forest.row_scan(meta, f, p - 1, s - 1, cap))
+
+
+def s_any_any(meta: K2Meta, f: K2Forest, s, cap: int) -> QueryResult:
+    """(S, ?P, ?O) -> per-predicate object lists (axis 0 = predicate)."""
+    s = jnp.asarray(s, jnp.int32)
+    return _ids(k2forest.row_scan_all_preds(meta, f, s - 1, cap))
+
+
+def any_po(meta: K2Meta, f: K2Forest, p, o, cap: int) -> QueryResult:
+    """(?S, P, O) -> subject IDs, ascending."""
+    p, o = jnp.asarray(p, jnp.int32), jnp.asarray(o, jnp.int32)
+    return _ids(k2forest.col_scan(meta, f, p - 1, o - 1, cap))
+
+
+def any_any_o(meta: K2Meta, f: K2Forest, o, cap: int) -> QueryResult:
+    """(?S, ?P, O) -> per-predicate subject lists."""
+    o = jnp.asarray(o, jnp.int32)
+    return _ids(k2forest.col_scan_all_preds(meta, f, o - 1, cap))
+
+
+def any_p_any(meta: K2Meta, f: K2Forest, p, cap: int) -> PairResult:
+    """(?S, P, ?O) -> all (subject, object) pairs of predicate P."""
+    p = jnp.asarray(p, jnp.int32)
+    return _pairs(k2forest.range_scan(meta, f, p - 1, cap))
+
+
+def dump(meta: K2Meta, f: K2Forest, cap: int) -> PairResult:
+    """(?S, ?P, ?O) -> every triple (axis 0 = predicate)."""
+    return _pairs(k2forest.range_scan_all_preds(meta, f, cap))
+
+
+# batched forms used by the serving path -----------------------------------
+
+
+def spo_batch(meta, f, s, p, o):
+    return spo(meta, f, s, p, o)
+
+
+def sp_any_batch(meta, f, s, p, cap: int) -> QueryResult:
+    s, p = jnp.asarray(s, jnp.int32), jnp.asarray(p, jnp.int32)
+    return _ids(k2forest.row_scan_batch(meta, f, p - 1, s - 1, cap))
+
+
+def any_po_batch(meta, f, p, o, cap: int) -> QueryResult:
+    p, o = jnp.asarray(p, jnp.int32), jnp.asarray(o, jnp.int32)
+    return _ids(k2forest.col_scan_batch(meta, f, p - 1, o - 1, cap))

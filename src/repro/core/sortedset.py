@@ -1,0 +1,84 @@
+"""Fixed-shape sorted-ID set algebra (intersection / union / unique).
+
+The paper's join machinery lives on ID-sorted result lists: "this
+intersection is performed in a very faster way by taking advantage of the
+ID-ordered of both lists".  Here the lists are fixed-capacity lanes with
+validity masks, so every op is jit-able:
+
+  * invalid lanes are driven to the ``SENTINEL`` (int32 max) so sorted order
+    puts them at the tail;
+  * intersection = vectorized binary search (``jnp.searchsorted``) of A's
+    lanes in B — O(cap·log cap) with no data-dependent shapes;
+  * union = concatenate + sort + neighbor-dedup + compact.
+
+``repro.kernels.sorted_intersect`` provides the Pallas-tiled version of the
+intersection; this module is its oracle and the default CPU path.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+SENTINEL = jnp.int32(2**31 - 1)
+
+
+class IdSet(NamedTuple):
+    """Ascending ids in valid lanes; SENTINEL elsewhere."""
+
+    ids: jax.Array  # int32[cap]
+    valid: jax.Array  # bool[cap]
+    count: jax.Array  # int32[]
+    overflow: jax.Array  # bool[]
+
+
+def from_result(ids: jax.Array, valid: jax.Array, count, overflow) -> IdSet:
+    """Normalize a QueryResult-like tuple: sentinel-fill invalid lanes."""
+    ids = jnp.where(valid, ids, SENTINEL)
+    return IdSet(ids, valid, jnp.asarray(count, jnp.int32), jnp.asarray(overflow))
+
+
+def intersect(a: IdSet, b: IdSet) -> IdSet:
+    """A ∩ B, ascending; capacity = a.cap (A's hits are a subset of A)."""
+    pos = jnp.searchsorted(b.ids, a.ids)
+    hit = jnp.take(b.ids, jnp.clip(pos, 0, b.ids.shape[0] - 1)) == a.ids
+    valid = a.valid & hit
+    ids = jnp.where(valid, a.ids, SENTINEL)
+    # valid lanes of A stay sorted; compact via sort (sentinels sink to tail)
+    order = jnp.argsort(ids)
+    ids = ids[order]
+    valid = ids != SENTINEL
+    return IdSet(ids, valid, valid.sum().astype(jnp.int32), a.overflow | b.overflow)
+
+
+def union_rows(ids2d: jax.Array, valid2d: jax.Array, cap: int, overflow) -> IdSet:
+    """Union of P sorted rows -> one sorted deduped set of capacity ``cap``."""
+    flat = jnp.where(valid2d, ids2d, SENTINEL).reshape(-1)
+    flat = jnp.sort(flat)
+    keep = (flat != SENTINEL) & jnp.concatenate(
+        [jnp.ones((1,), jnp.bool_), flat[1:] != flat[:-1]]
+    )
+    n_unique = keep.sum()
+    # stable-compact the kept lanes to the front, then truncate/pad to cap
+    idx = jnp.cumsum(keep.astype(jnp.int32)) - 1
+    tgt = jnp.where(keep, idx, flat.shape[0])
+    out = jnp.full((flat.shape[0] + 1,), SENTINEL, jnp.int32).at[tgt].set(
+        flat, mode="drop"
+    )[:-1]
+    out = out[:cap] if flat.shape[0] >= cap else jnp.pad(
+        out, (0, cap - flat.shape[0]), constant_values=2**31 - 1
+    )
+    valid = out != SENTINEL
+    ovf = jnp.asarray(overflow) | (n_unique > cap)
+    return IdSet(out, valid, jnp.minimum(n_unique, cap).astype(jnp.int32), ovf)
+
+
+def to_dense_mask(s: IdSet, extent: int) -> jax.Array:
+    """bool[extent+1] membership table (ids are 1-based; index 0 unused)."""
+    return (
+        jnp.zeros((extent + 2,), jnp.bool_)
+        .at[jnp.where(s.valid, s.ids, extent + 1)]
+        .set(True, mode="drop")[: extent + 1]
+    )

@@ -1,0 +1,51 @@
+"""Public jit'd entry points for the kernel layer.
+
+``INTERPRET`` flips every kernel into Pallas interpret mode — the CPU
+correctness path used by this container (TPU is the compile target).  On a
+real TPU backend set ``REPRO_PALLAS_INTERPRET=0`` (the default there).
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.k2tree import K2Meta, K2Tree
+from repro.kernels import block_spmm as _bs
+from repro.kernels import k2_check as _kc
+from repro.kernels import popcount as _pc
+from repro.kernels import sorted_intersect as _si
+
+INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0" and (
+    jax.default_backend() != "tpu"
+)
+
+
+def popcount(words: jax.Array, *, block_m: int = 8) -> jax.Array:
+    return _pc.popcount_2d(words, block_m=block_m, interpret=INTERPRET)
+
+
+def k2_check_tree(
+    meta: K2Meta, tree: K2Tree, rows: jax.Array, cols: jax.Array, *, block_q: int = 1024
+) -> jax.Array:
+    """Kernel-backed version of core.k2tree.check (single tree)."""
+    q = rows.shape[0]
+    pad = (-q) % block_q
+    if pad:
+        rows = jnp.pad(rows, (0, pad))
+        cols = jnp.pad(cols, (0, pad))
+    out = _kc.k2_check(
+        meta, rows, cols, tree.t.words, tree.t.rank_blocks, tree.l.words,
+        tree.ones_before, tree.level_start, block_q=block_q, interpret=INTERPRET,
+    )
+    return out[:q]
+
+
+def sorted_intersect_mask(a_ids: jax.Array, b_ids: jax.Array) -> jax.Array:
+    return _si.sorted_intersect_mask(a_ids, b_ids, interpret=INTERPRET)
+
+
+def block_spmm(mask: jax.Array, a: jax.Array, x: jax.Array, **kw) -> jax.Array:
+    return _bs.block_spmm(mask, a, x, interpret=INTERPRET, **kw)

@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``interpret=True`` ground truth)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitvec
+from repro.core.k2tree import K2Meta
+
+
+def popcount_ref(words: jax.Array) -> jax.Array:
+    return jax.lax.population_count(words).astype(jnp.int32)
+
+
+def k2_check_ref(
+    meta: K2Meta,
+    rows: jax.Array,
+    cols: jax.Array,
+    t_words: jax.Array,
+    t_rank: jax.Array,
+    l_words: jax.Array,
+    ones_before: jax.Array,
+    level_start: jax.Array,
+) -> jax.Array:
+    """Identical math to core/k2tree.check, phrased on raw arrays."""
+    H = meta.n_levels
+    rrem, crem = rows.astype(jnp.int32), cols.astype(jnp.int32)
+    rdig, cdig = [], []
+    for sub in meta.subsides:
+        rdig.append(rrem // sub)
+        cdig.append(crem // sub)
+        rrem, crem = rrem % sub, crem % sub
+    alive = jnp.ones(rows.shape, jnp.bool_)
+    pos = (rdig[0] * meta.ks[0] + cdig[0]).astype(jnp.int32)
+    for lvl in range(H):
+        last = lvl == H - 1
+        words = l_words if last else t_words
+        bit = bitvec.get_bit(words, pos)
+        alive = alive & (bit == 1)
+        if not last:
+            j = bitvec.rank1(t_words, t_rank, pos) - ones_before[lvl]
+            nxt = rdig[lvl + 1] * meta.ks[lvl + 1] + cdig[lvl + 1]
+            pos = level_start[lvl + 1] + j * meta.radices[lvl + 1] + nxt
+            pos = jnp.where(alive, pos, 0).astype(jnp.int32)
+    return alive
+
+
+def sorted_intersect_mask_ref(a_ids: jax.Array, b_ids: jax.Array) -> jax.Array:
+    pos = jnp.searchsorted(b_ids, a_ids)
+    got = jnp.take(b_ids, jnp.clip(pos, 0, b_ids.shape[0] - 1), mode="clip")
+    return (got == a_ids) & (a_ids != jnp.int32(2**31 - 1))
+
+
+def block_spmm_ref(mask: jax.Array, a: jax.Array, x: jax.Array,
+                   block_m: int = 128, block_k: int = 128) -> jax.Array:
+    """Masked matmul: zero out masked-off tiles of A, then dense matmul."""
+    m, k = a.shape
+    mm = jnp.repeat(jnp.repeat(mask, block_m, 0), block_k, 1).astype(a.dtype)
+    return jnp.dot(a * mm, x, preferred_element_type=jnp.float32)

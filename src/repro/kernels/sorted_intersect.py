@@ -1,0 +1,68 @@
+"""Pallas TPU kernel: sorted-list intersection (joins A–C hot loop).
+
+The paper's merge-join intersects two ID-sorted result lists.  A sequential
+two-pointer merge is hostile to the VPU, so the TPU formulation is a
+**vectorized binary search**: every lane of A searches B (log₂|B| static
+steps of gather + compare), then membership = (B[lo] == a).  Sentinel-padded
+invalid lanes (int32 max) never match.
+
+Grid: blocks of A lanes; B is whole-array VMEM resident (result lists are
+capacity-bounded, cap ≤ 64k -> 256 KB — fits easily).  Output is the match
+mask; compaction (cumsum scatter) stays in XLA where it fuses with the
+downstream join logic.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _make_kernel(cap_b: int):
+    steps = max(1, math.ceil(math.log2(cap_b)))
+
+    def kernel(a_ref, b_ref, out_ref):
+        a = a_ref[...]
+        b = b_ref[...]
+        lo = jnp.zeros(a.shape, jnp.int32)
+        hi = jnp.full(a.shape, cap_b, jnp.int32)  # search [lo, hi)
+        for _ in range(steps):
+            mid = (lo + hi) >> 1
+            bm = jnp.take(b, mid, mode="clip")
+            go_right = bm < a
+            lo = jnp.where(go_right, mid + 1, lo)
+            hi = jnp.where(go_right, hi, mid)
+        hit = jnp.take(b, jnp.clip(lo, 0, cap_b - 1), mode="clip") == a
+        out_ref[...] = hit & (a != jnp.int32(2**31 - 1))  # sentinel never matches
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("block_a", "interpret"))
+def sorted_intersect_mask(
+    a_ids: jax.Array,
+    b_ids: jax.Array,
+    *,
+    block_a: int = 2048,
+    interpret: bool = False,
+) -> jax.Array:
+    """mask[i] = a_ids[i] ∈ b_ids.  Both sentinel-padded ascending int32."""
+    (ca,) = a_ids.shape
+    (cb,) = b_ids.shape
+    block_a = min(block_a, ca)
+    assert ca % block_a == 0, (ca, block_a)
+    return pl.pallas_call(
+        _make_kernel(cb),
+        grid=(ca // block_a,),
+        in_specs=[
+            pl.BlockSpec((block_a,), lambda i: (i,)),
+            pl.BlockSpec((cb,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_a,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((ca,), jnp.bool_),
+        interpret=interpret,
+    )(a_ids, b_ids)

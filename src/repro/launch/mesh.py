@@ -1,0 +1,37 @@
+"""Production mesh definitions.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — the dry-run sets XLA_FLAGS before first init.
+
+  single-pod: (16, 16)    axes (data, model)  = 256 chips (one v5e pod)
+  multi-pod : (2, 16, 16) axes (pod, data, model) = 512 chips
+
+'model' carries TP / EP / the k²-triples predicate arena; 'data' carries DP
++ FSDP weight shards; 'pod' is pure DP across the (slow) cross-pod links —
+gradient all-reduce over 'pod' is the int8-compression target.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]) -> jax.sharding.Mesh:
+    return jax.make_mesh(shape, axes)
+
+
+def dp_axes(mesh: jax.sharding.Mesh) -> tuple[str, ...]:
+    """Every mesh axis that is not 'model' (DP/FSDP axes)."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+# TPU v5e hardware constants (per chip) — the roofline denominators
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s
+HBM_BW = 819e9  # B/s
+ICI_BW = 50e9  # B/s per link

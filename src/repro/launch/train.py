@@ -1,0 +1,103 @@
+"""End-to-end training driver: ``python -m repro.launch.train --arch <id>``.
+
+Runs REAL training (allocating params, streaming data) on whatever devices
+exist — the production path on a TPU pod, the smoke path on this CPU
+container (use --smoke and small --steps).  Includes the full
+fault-tolerance loop: auto-resume, periodic atomic checkpoints, straggler
+watchdog.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default=None, help="defaults to the arch's train shape")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--smoke", action="store_true", help="reduced config")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    args = ap.parse_args()
+
+    from repro.configs import get
+    from repro.data.tokens import TokenStream
+    from repro.data import graphs as G, recsys as R
+    from repro.models import transformer as tfm
+    from repro.models.gnn import common as gc
+    from repro.models.recsys import xdeepfm
+    from repro.launch.programs import GNN_MODULES
+    from repro.train import optim
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    arch = get(args.arch)
+    cfg = arch.smoke_cfg if args.smoke else arch.cfg
+    key = jax.random.PRNGKey(0)
+    opt = optim.adafactor(args.lr) if arch.optimizer == "adafactor" else optim.adamw(args.lr)
+
+    if arch.family == "lm":
+        params = tfm.init(cfg, key)
+        ts = TokenStream(cfg.vocab, args.seq, seed=0)
+
+        def batches():
+            while True:
+                b = ts.batch(args.batch)
+                yield {k: jnp.asarray(v) for k, v in b.items()}
+
+        loss_fn = lambda p, b: tfm.loss_fn(cfg, p, b)
+    elif arch.family == "gnn":
+        mod = GNN_MODULES[args.arch]
+        import dataclasses as dc
+
+        n_classes = 7
+        cfg = dc.replace(cfg, out_dim=n_classes, **(
+            {"in_dim": 32} if hasattr(cfg, "in_dim") else {}))
+        params = mod.init(cfg, key)
+        g = G.random_graph(512, 4096, 32, n_classes=n_classes, seed=0)
+
+        def batches():
+            gb = G.to_batch(g, n_classes)
+            gb = jax.tree.map(lambda x: jnp.asarray(x) if isinstance(x, np.ndarray) else x, gb)
+            while True:
+                yield gb
+
+        loss_fn = lambda p, b: mod.loss_fn(cfg, p, b)
+    elif arch.family == "recsys":
+        params = xdeepfm.init(cfg, key)
+        i = [0]
+
+        def batches():
+            while True:
+                b = R.ctr_batch(args.batch, cfg.n_fields, cfg.rows_per_field, seed=i[0])
+                i[0] += 1
+                yield {k: jnp.asarray(v) for k, v in b.items()}
+
+        loss_fn = lambda p, b: xdeepfm.loss_fn(cfg, p, b)
+    else:
+        raise SystemExit(f"train driver does not apply to family {arch.family!r}")
+
+    tc = TrainerConfig(
+        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every, log_every=args.log_every
+    )
+    tr = Trainer(tc, loss_fn, opt, params)
+    if tr.try_resume():
+        print(f"resumed from step {tr.step_num}")
+    hist = tr.run(batches(), args.steps)
+    print(
+        f"done: {len(hist)} steps, loss {hist[0]['loss']:.4f} -> {hist[-1]['loss']:.4f}; "
+        f"stragglers flagged: {len(tr.watchdog.flagged)}"
+    )
+
+
+if __name__ == "__main__":
+    main()

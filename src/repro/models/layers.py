@@ -1,0 +1,325 @@
+"""Shared neural-net layers (pure JAX, no framework deps).
+
+Everything is functional: params are pytrees of jnp arrays, layers are
+functions.  Conventions:
+
+  * activations bf16, params f32 master + bf16 compute cast at use;
+  * attention is **chunked online-softmax** (flash-style lax.scan over KV
+    blocks) so the S×S score matrix is never materialized — required for the
+    32k/500k assigned shapes to fit HBM;
+  * GQA: q heads H grouped over Kv kv-heads (H % Kv == 0);
+  * optional logit soft-capping (gemma2) and sliding-window masks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """Rotary embedding.  x: [..., S, n, dh] (dh even), positions: [..., S]."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, half]
+    cos = jnp.cos(ang)[..., None, :]  # [..., S, 1, half]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def softcap(x: jax.Array, cap: float | None) -> jax.Array:
+    if cap is None:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# chunked (flash-style) attention — pure JAX, shape-bounded memory
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def _attn_mask(qp, kp, kv_len, causal, window):
+    """[cq, ckv] validity mask from absolute positions."""
+    m = kp[None, :] < kv_len
+    if causal:
+        m = m & (kp[None, :] <= qp[:, None])
+    if window is not None:
+        m = m & (kp[None, :] > qp[:, None] - window)
+    return m
+
+
+def _flash_fwd_impl(q, k, v, causal, window, attn_softcap, skv, scale):
+    """q: [B,nq,cq,Kv,G,dh] blocked; k/v: [B,nkv,ckv,Kv,dh] blocked.
+    Returns (out [B,nq,cq,Kv,G,dh] f32, lse [B,nq,cq,Kv,G] f32)."""
+    B, nq, cq, Kv, G, dh = q.shape
+    nkv, ckv = k.shape[1], k.shape[2]
+    q_pos = jnp.arange(nq * cq).reshape(nq, cq)
+    kv_pos = jnp.arange(nkv * ckv).reshape(nkv, ckv)
+
+    def per_qchunk(args):
+        qc, qp = args  # [B,cq,Kv,G,dh], [cq]
+        m0 = jnp.full((B, cq, Kv, G), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, cq, Kv, G), jnp.float32)
+        a0 = jnp.zeros((B, cq, Kv, G, dh), jnp.float32)
+
+        def body(carry, inp):
+            m, l, acc = carry
+            kc, vc, kp = inp
+            s = jnp.einsum(
+                "bqkgd,bckd->bqkgc", qc, kc, preferred_element_type=jnp.float32
+            ) * scale
+            s = softcap(s, attn_softcap)
+            mask = _attn_mask(qp, kp, skv, causal, window)
+            s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bqkgc,bckd->bqkgd", p, vc.astype(jnp.float32),
+                preferred_element_type=jnp.float32,
+            )
+            return (m_new, l, acc), None
+
+        (m, l, acc), _ = jax.lax.scan(
+            body, (m0, l0, a0), (k.swapaxes(0, 1), v.swapaxes(0, 1), kv_pos)
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))
+        return out, lse
+
+    out, lse = jax.lax.map(per_qchunk, (q.swapaxes(0, 1), q_pos))
+    return out.swapaxes(0, 1), lse.swapaxes(0, 1)
+
+
+def _flash_scores(qc, kc, qp, kp, skv, causal, window, attn_softcap, scale):
+    """Recompute one (q-chunk, kv-chunk) score block + d(softcap) factor."""
+    raw = jnp.einsum(
+        "bqkgd,bckd->bqkgc", qc, kc, preferred_element_type=jnp.float32
+    ) * scale
+    s = softcap(raw, attn_softcap)
+    dcap = (
+        1.0 - (s / attn_softcap) ** 2 if attn_softcap is not None
+        else jnp.ones_like(s)
+    )
+    mask = _attn_mask(qp, kp, skv, causal, window)[None, :, None, None, :]
+    s = jnp.where(mask, s, NEG_INF)
+    return s, jnp.where(mask, dcap, 0.0)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9))
+def _flash(q, k, v, causal, window, attn_softcap, skv, scale, cq, ckv):
+    out, _ = _flash_fwd_impl(q, k, v, causal, window, attn_softcap, skv, scale)
+    return out
+
+
+def _flash_vjp_fwd(q, k, v, causal, window, attn_softcap, skv, scale, cq, ckv):
+    out, lse = _flash_fwd_impl(q, k, v, causal, window, attn_softcap, skv, scale)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_vjp_bwd(causal, window, attn_softcap, skv, scale, cq, ckv, res, do):
+    """Flash backward: two block sweeps (dq; then dk/dv), p recomputed from
+    the saved log-sum-exp — memory stays O(B·S·H), no stored probabilities."""
+    q, k, v, out, lse = res
+    B, nq, _cq, Kv, G, dh = q.shape
+    nkv, _ckv = k.shape[1], k.shape[2]
+    q_pos = jnp.arange(nq * _cq).reshape(nq, _cq)
+    kv_pos = jnp.arange(nkv * _ckv).reshape(nkv, _ckv)
+    delta = jnp.sum(do * out, axis=-1)  # [B,nq,cq,Kv,G]
+
+    def dq_chunk(args):
+        qc, lsec, doc, dlt, qp = args
+
+        def body(dq_acc, inp):
+            kc, vc, kp = inp
+            s, dcap = _flash_scores(qc, kc, qp, kp, skv, causal, window, attn_softcap, scale)
+            p = jnp.exp(s - lsec[..., None])
+            dp = jnp.einsum("bqkgd,bckd->bqkgc", doc, vc.astype(jnp.float32))
+            ds = p * (dp - dlt[..., None]) * dcap * scale
+            dq_acc = dq_acc + jnp.einsum(
+                "bqkgc,bckd->bqkgd", ds, kc.astype(jnp.float32)
+            )
+            return dq_acc, None
+
+        dq0 = jnp.zeros((B, _cq, Kv, G, dh), jnp.float32)
+        dq, _ = jax.lax.scan(body, dq0, (k.swapaxes(0, 1), v.swapaxes(0, 1), kv_pos))
+        return dq
+
+    dq = jax.lax.map(
+        dq_chunk,
+        (q.swapaxes(0, 1), lse.swapaxes(0, 1), do.swapaxes(0, 1),
+         delta.swapaxes(0, 1), q_pos),
+    ).swapaxes(0, 1)
+
+    def dkv_chunk(args):
+        kc, vc, kp = args
+
+        def body(carry, inp):
+            dk_acc, dv_acc = carry
+            qc, lsec, doc, dlt, qp = inp
+            s, dcap = _flash_scores(qc, kc, qp, kp, skv, causal, window, attn_softcap, scale)
+            p = jnp.exp(s - lsec[..., None])
+            dv_acc = dv_acc + jnp.einsum("bqkgc,bqkgd->bckd", p, doc)
+            dp = jnp.einsum("bqkgd,bckd->bqkgc", doc, vc.astype(jnp.float32))
+            ds = p * (dp - dlt[..., None]) * dcap * scale
+            dk_acc = dk_acc + jnp.einsum(
+                "bqkgc,bqkgd->bckd", ds, qc.astype(jnp.float32)
+            )
+            return (dk_acc, dv_acc), None
+
+        z = jnp.zeros((B, _ckv, Kv, dh), jnp.float32)
+        (dk, dv), _ = jax.lax.scan(
+            body, (z, z),
+            (q.swapaxes(0, 1), lse.swapaxes(0, 1), do.swapaxes(0, 1),
+             delta.swapaxes(0, 1), q_pos),
+        )
+        return dk, dv
+
+    dk, dv = jax.lax.map(dkv_chunk, (k.swapaxes(0, 1), v.swapaxes(0, 1), kv_pos))
+    dk, dv = dk.swapaxes(0, 1), dv.swapaxes(0, 1)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_flash.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
+
+
+def chunked_attention(
+    q: jax.Array,  # [B, Sq, H, dh]
+    k: jax.Array,  # [B, Skv, Kv, dh]
+    v: jax.Array,  # [B, Skv, Kv, dh]
+    *,
+    causal: bool,
+    q_offset: int = 0,  # static; full-sequence paths use 0
+    window: int | None = None,  # sliding-window size (None = global)
+    attn_softcap: float | None = None,
+    chunk_q: int = 512,
+    chunk_kv: int = 1024,
+) -> jax.Array:
+    """Flash attention in pure JAX: online-softmax forward + custom-VJP
+    backward that RECOMPUTES score blocks from the saved log-sum-exp.
+
+    Plain AD through the online-softmax scan would stash every probability
+    block ([nq·nkv·B·cq·H·ckv] — gigabytes per layer); the custom VJP keeps
+    attention memory at O(B·S·H) statistics.  GQA folds q heads into groups
+    of the Kv kv-heads.
+    """
+    B, Sq, H, dh = q.shape
+    _, Skv, Kv, _ = k.shape
+    G = H // Kv
+    scale = 1.0 / math.sqrt(dh)
+    orig_sq = Sq
+    assert q_offset == 0, "full-sequence path expects q_offset 0 (decode is separate)"
+
+    chunk_q = min(chunk_q, max(Sq, 1))
+    chunk_kv = min(chunk_kv, max(Skv, 1))
+    pad_q = (-Sq) % chunk_q
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        Sq = q.shape[1]
+    pad_kv = (-Skv) % chunk_kv
+    if pad_kv:
+        k = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+    Skv_p = k.shape[1]
+
+    qb = q.reshape(B, Sq // chunk_q, chunk_q, Kv, G, dh)
+    kb = k.reshape(B, Skv_p // chunk_kv, chunk_kv, Kv, dh)
+    vb = v.reshape(B, Skv_p // chunk_kv, chunk_kv, Kv, dh)
+    out = _flash(
+        qb, kb, vb, causal, window, attn_softcap, Skv, scale, chunk_q, chunk_kv
+    )
+    out = out.reshape(B, Sq, H, dh)
+    return out[:, :orig_sq].astype(jnp.bfloat16)
+
+
+def decode_attention(
+    q: jax.Array,  # [B, H, dh] — one new token per sequence
+    k_cache: jax.Array,  # [B, S, Kv, dh]
+    v_cache: jax.Array,  # [B, S, Kv, dh]
+    *,
+    length: jax.Array,  # [B] or scalar: number of valid cache positions
+    window: int | None = None,
+    is_local: jax.Array | None = None,  # traced flag: apply window or not
+    attn_softcap: float | None = None,
+) -> jax.Array:
+    """Single-token attention, linear in S.  S may be mesh-sharded; the
+    softmax max/sum reductions over S become XLA all-reduces.
+
+    The cache stays bf16 end-to-end (einsum accumulates in f32 via
+    preferred_element_type — no f32 copy of a multi-GB cache).  Local
+    windows select via the MASK under a traced ``is_local`` flag, so
+    local/global layers share one attention computation.
+    """
+    B, H, dh = q.shape
+    _, S, Kv, _ = k_cache.shape
+    G = H // Kv
+    scale = 1.0 / math.sqrt(dh)
+    qg = q.reshape(B, Kv, G, dh)
+    s = jnp.einsum(
+        "bkgd,bskd->bkgs", qg, k_cache, preferred_element_type=jnp.float32
+    ) * scale
+    s = softcap(s, attn_softcap)
+    pos = jnp.arange(S)[None, None, None, :]
+    ln = jnp.asarray(length)
+    ln = ln[:, None, None, None] if ln.ndim else ln
+    mask = pos < ln
+    if window is not None:
+        win_mask = pos > ln - 1 - window
+        if is_local is not None:
+            win_mask = win_mask | ~jnp.asarray(is_local)
+        mask = mask & win_mask
+    s = jnp.where(mask, s, NEG_INF)
+    # p stays f32: it is ~dh·G× smaller than the cache stream (no bandwidth
+    # win from bf16) and quantizing it costs visible decode accuracy
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum(
+        "bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(B, H, dh).astype(jnp.bfloat16)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def swiglu(x: jax.Array, w1: jax.Array, w3: jax.Array, w2: jax.Array) -> jax.Array:
+    """Gated-SiLU MLP: (silu(x·w1) ⊙ (x·w3)) · w2."""
+    h = jax.nn.silu(x @ w1.astype(x.dtype)) * (x @ w3.astype(x.dtype))
+    return h @ w2.astype(x.dtype)
+
+
+def gelu_mlp(x: jax.Array, w1: jax.Array, w2: jax.Array) -> jax.Array:
+    return jax.nn.gelu(x @ w1.astype(x.dtype)) @ w2.astype(x.dtype)
+
+
+def mlp_stack(x: jax.Array, ws: list[jax.Array], bs: list[jax.Array]) -> jax.Array:
+    """Plain relu MLP (recsys / GNN blocks)."""
+    for i, (w, b) in enumerate(zip(ws, bs)):
+        x = x @ w.astype(x.dtype) + b.astype(x.dtype)
+        if i < len(ws) - 1:
+            x = jax.nn.relu(x)
+    return x

@@ -1,0 +1,50 @@
+"""Packed bit vector + rank: numpy oracles and hypothesis properties."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitvec
+
+
+def test_pack_roundtrip(rng):
+    bits = (rng.random(1000) < 0.3).astype(np.uint8)
+    words = bitvec.pack_bits_np(bits)
+    unpacked = np.zeros(len(bits), np.uint8)
+    for i in range(len(bits)):
+        unpacked[i] = (words[i >> 5] >> np.uint32(i & 31)) & 1
+    assert (unpacked == bits).all()
+
+
+def test_popcount_np(rng):
+    w = rng.integers(0, 2**32, 256, dtype=np.uint32)
+    exp = np.array([bin(int(x)).count("1") for x in w])
+    assert (bitvec.popcount_np(w) == exp).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.booleans(), min_size=1, max_size=300), st.data())
+def test_rank1_matches_cumsum(bits, data):
+    bits = np.array(bits, np.uint8)
+    bv = bitvec.bitvec_from_bits(bits)
+    pos = data.draw(st.integers(min_value=0, max_value=len(bits) - 1))
+    got = int(bitvec.rank1(bv.words, bv.rank_blocks, jnp.asarray(pos)))
+    assert got == int(bits[:pos].sum())
+
+
+def test_rank1_vectorized(rng):
+    bits = (rng.random(2048) < 0.5).astype(np.uint8)
+    bv = bitvec.bitvec_from_bits(bits)
+    pos = rng.integers(0, 2048, 200)
+    got = np.asarray(bitvec.rank1(bv.words, bv.rank_blocks, jnp.asarray(pos)))
+    exp = np.cumsum(bits)[pos] - bits[pos]  # exclusive rank
+    exp = np.concatenate([[0], np.cumsum(bits)])[pos]
+    assert (got == exp).all()
+
+
+def test_get_bit(rng):
+    bits = (rng.random(500) < 0.2).astype(np.uint8)
+    bv = bitvec.bitvec_from_bits(bits)
+    pos = rng.integers(0, 500, 100)
+    got = np.asarray(bitvec.get_bit(bv.words, jnp.asarray(pos)))
+    assert (got == bits[pos]).all()

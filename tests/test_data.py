@@ -1,0 +1,96 @@
+"""Data pipelines: RDF generator/parser, token stream, sorted-set algebra."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sortedset
+from repro.data import rdf
+from repro.data.tokens import TokenStream
+
+
+def test_rdf_generate_shape_stats():
+    ds = rdf.generate(5000, n_subjects=200, n_preds=10, n_objects=300, seed=0)
+    assert ds.ids.shape[1] == 3
+    assert ds.ids[:, 0].max() <= 200 and ds.ids[:, 0].min() >= 1
+    assert ds.ids[:, 1].max() <= 10
+    assert ds.ids[:, 2].max() <= 300
+    # duplicates removed (paper cleans them)
+    assert len(np.unique(ds.ids, axis=0)) == len(ds.ids)
+
+
+def test_generate_like_paper_ratios():
+    ds = rdf.generate_like("geonames", 10_000)
+    assert ds.n_preds <= 20  # geonames has 20 predicates
+
+
+def test_parse_n3_roundtrip():
+    text = '<http://a> <http://p> "literal with spaces" .\n<http://b> <http://p> <http://a> .'
+    ts = rdf.parse_n3(text)
+    assert ts[0] == ("http://a", "http://p", '"literal with spaces"')
+    assert ts[1] == ("http://b", "http://p", "http://a")
+
+
+def test_front_coded_strings():
+    from repro.core.dictionary import FrontCodedStrings
+
+    terms = sorted(f"http://example.org/resource/{i:06d}" for i in range(100))
+    fc = FrontCodedStrings(terms, bucket=8)
+    for i in (0, 1, 7, 8, 55, 99):
+        assert fc[i] == terms[i]
+    raw = sum(len(t.encode()) for t in terms)
+    assert fc.size_bytes() < raw / 2  # front-coding compresses shared prefixes
+
+
+def test_token_stream_learnable_structure():
+    ts = TokenStream(64, 32, seed=0)
+    b = ts.batch(16)
+    assert b["tokens"].shape == (16, 32)
+    assert (b["labels"][:, :-1] == b["tokens"][:, 1:]).all()
+    # deterministic structure: most transitions are (t + shift) % V
+    diffs = (b["labels"] - b["tokens"]) % 64
+    # per-row modal diff should dominate (75% bigram structure)
+    row_match = [(d == np.bincount(d).argmax()).mean() for d in diffs]
+    assert np.mean(row_match) > 0.5
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.lists(st.integers(min_value=1, max_value=1000), max_size=50),
+    st.lists(st.integers(min_value=1, max_value=1000), max_size=50),
+)
+def test_sortedset_intersect_property(a, b):
+    cap = 64
+    a = sorted(set(a))[:cap]
+    b = sorted(set(b))[:cap]
+    S = sortedset.SENTINEL
+
+    def mk(v):
+        ids = np.full(cap, S, np.int32)
+        ids[: len(v)] = v
+        return sortedset.IdSet(
+            jnp.asarray(ids), jnp.asarray(ids != S),
+            jnp.asarray(len(v), jnp.int32), jnp.asarray(False),
+        )
+
+    r = sortedset.intersect(mk(a), mk(b))
+    got = np.asarray(r.ids)[np.asarray(r.valid)].tolist()
+    assert got == sorted(set(a) & set(b))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.lists(st.integers(min_value=1, max_value=500), max_size=20), min_size=1, max_size=5))
+def test_sortedset_union_property(rows):
+    cap = 64
+    S = sortedset.SENTINEL
+    P = len(rows)
+    ids = np.full((P, cap), S, np.int32)
+    valid = np.zeros((P, cap), bool)
+    for i, r in enumerate(rows):
+        r = sorted(set(r))[:cap]
+        ids[i, : len(r)] = r
+        valid[i, : len(r)] = True
+    r = sortedset.union_rows(jnp.asarray(ids), jnp.asarray(valid), cap, False)
+    got = np.asarray(r.ids)[np.asarray(r.valid)].tolist()
+    exp = sorted(set().union(*[set(x) for x in rows]))[:cap]
+    assert got == exp

@@ -1,0 +1,91 @@
+"""k²-tree vs dense-matrix oracle, incl. hypothesis sweeps (paper core)."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import k2tree
+from repro.core.k2tree import K2Meta, hybrid_ks
+
+
+def _dense(rows, cols, side):
+    d = np.zeros((side, side), np.uint8)
+    d[rows, cols] = 1
+    return d
+
+
+def test_hybrid_ks_matches_paper():
+    # k=4 for the first 5 levels, then k=2
+    ks = hybrid_ks(100_000)
+    assert ks[:5] == (4, 4, 4, 4, 4)
+    assert all(k == 2 for k in ks[5:])
+    assert np.prod(ks) >= 100_000
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    st.integers(min_value=2, max_value=120),  # side_needed
+    st.integers(min_value=0, max_value=150),  # nnz
+    st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_check_matches_dense(side_needed, nnz, seed):
+    rng = np.random.default_rng(seed)
+    meta = K2Meta(hybrid_ks(side_needed))
+    rows = rng.integers(0, side_needed, nnz)
+    cols = rng.integers(0, side_needed, nnz)
+    tree = k2tree.build(rows, cols, meta)
+    dense = _dense(rows, cols, meta.side)
+    q = 64
+    qr = rng.integers(0, side_needed, q)
+    qc = rng.integers(0, side_needed, q)
+    got = np.asarray(k2tree.check(meta, tree, jnp.asarray(qr), jnp.asarray(qc)))
+    assert (got == (dense[qr, qc] == 1)).all()
+
+
+def test_scans_sorted_and_complete(rng):
+    meta = K2Meta(hybrid_ks(200))
+    rows = rng.integers(0, 200, 400)
+    cols = rng.integers(0, 200, 400)
+    tree = k2tree.build(rows, cols, meta)
+    dense = _dense(rows, cols, meta.side)
+    for r in rng.integers(0, 200, 10):
+        res = k2tree.row_scan(meta, tree, jnp.asarray(int(r)), cap=256)
+        ids = np.asarray(res.ids)[np.asarray(res.valid)]
+        exp = np.nonzero(dense[r])[0]
+        assert (ids == exp).all()  # equality => ID-sorted (merge-join ready)
+    for c in rng.integers(0, 200, 10):
+        res = k2tree.col_scan(meta, tree, jnp.asarray(int(c)), cap=256)
+        ids = np.asarray(res.ids)[np.asarray(res.valid)]
+        assert (ids == np.nonzero(dense[:, c])[0]).all()
+
+
+def test_range_scan_full(rng):
+    meta = K2Meta(hybrid_ks(64))
+    rows = rng.integers(0, 64, 100)
+    cols = rng.integers(0, 64, 100)
+    tree = k2tree.build(rows, cols, meta)
+    dense = _dense(rows, cols, meta.side)
+    res = k2tree.range_scan(meta, tree, cap=512)
+    v = np.asarray(res.valid)
+    got = set(zip(np.asarray(res.rows)[v].tolist(), np.asarray(res.cols)[v].tolist()))
+    assert got == set(zip(*np.nonzero(dense)))
+
+
+def test_overflow_flag(rng):
+    meta = K2Meta(hybrid_ks(64))
+    rows = np.zeros(60, np.int64)  # dense row 0
+    cols = np.arange(60)
+    tree = k2tree.build(rows, cols, meta)
+    res = k2tree.row_scan(meta, tree, jnp.asarray(0), cap=16)
+    assert bool(res.overflow)
+    assert int(res.count) <= 16
+
+
+def test_size_bits_compresses(rng):
+    """The paper's point: sparse matrices compress far below dense bits."""
+    meta = K2Meta(hybrid_ks(4096))
+    rows = rng.integers(0, 4096, 2000)
+    cols = rng.integers(0, 4096, 2000)
+    h = k2tree.build_host(rows, cols, meta)
+    dense_bits = 4096 * 4096
+    assert k2tree.size_bits(h) < dense_bits / 50

@@ -1,0 +1,94 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py oracles."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import k2tree
+from repro.core.k2tree import K2Meta, hybrid_ks
+from repro.kernels import ops, ref
+
+SENTINEL = 2**31 - 1
+
+
+@pytest.mark.parametrize("m,n", [(8, 128), (16, 256), (32, 512), (8, 1024)])
+def test_popcount_shapes(rng, m, n):
+    w = rng.integers(0, 2**32, (m, n), dtype=np.uint32)
+    got = np.asarray(ops.popcount(jnp.asarray(w)))
+    exp = np.asarray(ref.popcount_ref(jnp.asarray(w)))
+    assert (got == exp).all()
+
+
+@pytest.mark.parametrize("side,nnz,q", [(50, 100, 700), (500, 900, 1100), (3000, 500, 512)])
+def test_k2_check_sweep(rng, side, nnz, q):
+    meta = K2Meta(hybrid_ks(side))
+    rows = rng.integers(0, side, nnz)
+    cols = rng.integers(0, side, nnz)
+    tree = k2tree.build(rows, cols, meta)
+    qr = rng.integers(0, side, q).astype(np.int32)
+    qc = rng.integers(0, side, q).astype(np.int32)
+    got = np.asarray(ops.k2_check_tree(meta, tree, jnp.asarray(qr), jnp.asarray(qc), block_q=256))
+    exp = np.asarray(
+        ref.k2_check_ref(
+            meta, jnp.asarray(qr), jnp.asarray(qc), tree.t.words, tree.t.rank_blocks,
+            tree.l.words, tree.ones_before, tree.level_start,
+        )
+    )
+    assert (got == exp).all()
+    dense = np.zeros((meta.side, meta.side), np.uint8)
+    dense[rows, cols] = 1
+    assert (got == (dense[qr, qc] == 1)).all()
+
+
+@pytest.mark.parametrize("ca,cb,na,nb", [(128, 128, 50, 100), (512, 1024, 300, 700), (2048, 256, 1000, 200)])
+def test_sorted_intersect_sweep(rng, ca, cb, na, nb):
+    a = np.sort(rng.choice(100_000, na, replace=False)).astype(np.int32)
+    b = np.sort(rng.choice(100_000, nb, replace=False)).astype(np.int32)
+    ap = np.full(ca, SENTINEL, np.int32); ap[:na] = a
+    bp = np.full(cb, SENTINEL, np.int32); bp[:nb] = b
+    got = np.asarray(ops.sorted_intersect_mask(jnp.asarray(ap), jnp.asarray(bp)))
+    exp = np.asarray(ref.sorted_intersect_mask_ref(jnp.asarray(ap), jnp.asarray(bp)))
+    assert (got == exp).all()
+    assert (got[:na] == np.isin(a, b)).all()
+    assert not got[na:].any()  # sentinels never match
+
+
+@pytest.mark.parametrize("m,k,d,dtype", [
+    (256, 256, 128, np.float32),
+    (512, 384, 256, np.float32),
+    (256, 256, 128, jnp.bfloat16),
+])
+def test_block_spmm_sweep(rng, m, k, d, dtype):
+    bm = bk = 128
+    mask = (rng.random((m // bm, k // bk)) < 0.5).astype(np.int32)
+    a = (rng.random((m, k)) < 0.02).astype(np.float32)
+    x = rng.standard_normal((k, d)).astype(np.float32)
+    a_t = jnp.asarray(a, dtype)
+    x_t = jnp.asarray(x, dtype)
+    got = np.asarray(ops.block_spmm(jnp.asarray(mask), a_t, x_t))
+    exp = np.asarray(ref.block_spmm_ref(jnp.asarray(mask), a_t, x_t))
+    tol = 1e-5 if dtype == np.float32 else 2e-2
+    np.testing.assert_allclose(got, exp, rtol=tol, atol=tol)
+
+
+def test_block_spmm_mask_semantics(rng):
+    """Masked-off tiles contribute exactly zero (never silently included)."""
+    m = k = 256
+    mask = np.zeros((2, 2), np.int32)
+    mask[0, 0] = 1
+    a = np.ones((m, k), np.float32)
+    x = np.ones((k, 128), np.float32)
+    got = np.asarray(ops.block_spmm(jnp.asarray(mask), jnp.asarray(a), jnp.asarray(x)))
+    assert (got[:128] == 128.0).all()  # only the ON tile's 128 k-elems
+    assert (got[128:] == 0.0).all()
+
+
+def test_mask_from_k2_level():
+    from repro.kernels.block_spmm import mask_from_k2_level
+
+    lvl = jnp.asarray(np.array([[1, 0], [0, 1]], np.int32))
+    m = np.asarray(mask_from_k2_level(lvl, side=512, block=128))
+    assert m.shape == (4, 4)
+    assert m[:2, :2].all() and m[2:, 2:].all()
+    assert not m[:2, 2:].any() and not m[2:, :2].any()

@@ -1,0 +1,109 @@
+"""BGP optimizer (the paper's future-work item) vs a brute-force oracle."""
+
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core import k2triples
+from repro.core.optimizer import TriplePattern, estimate_cardinality, execute_bgp, plan
+from repro.data import rdf
+
+
+@pytest.fixture(scope="module")
+def store_T():
+    ds = rdf.generate(2500, n_subjects=90, n_preds=6, n_objects=110, seed=5)
+    store = k2triples.from_id_triples(
+        ds.ids, n_so=ds.n_so, n_subjects=ds.n_subjects,
+        n_objects=ds.n_objects, n_preds=ds.n_preds,
+    )
+    return store, set(map(tuple, ds.ids.tolist())), ds
+
+
+def _oracle_bgp(T, patterns):
+    """Brute-force: enumerate all variable assignments consistent with T."""
+    sols = [dict()]
+    for pat in patterns:
+        new = []
+        for b in sols:
+            for (s, p, o) in T:
+                bb = dict(b)
+                ok = True
+                for term, val in ((pat.s, s), (pat.p, p), (pat.o, o)):
+                    if isinstance(term, str):
+                        if term in bb and bb[term] != val:
+                            ok = False
+                            break
+                        bb[term] = val
+                    elif term != val:
+                        ok = False
+                        break
+                if ok:
+                    new.append(bb)
+        sols = new
+    keys = sorted({k for s in sols for k in s})
+    return {tuple(s[k] for k in keys) for s in sols}, keys
+
+
+def _got_set(bindings):
+    keys = sorted(bindings)
+    if not keys:
+        return set(), []
+    arr = np.stack([bindings[k] for k in keys], axis=1)
+    return set(map(tuple, arr.tolist())), keys
+
+
+def test_cardinality_ordering(store_T):
+    store, T, ds = store_T
+    s, p, o = map(int, ds.ids[0])
+    # strictly more selective patterns estimate lower
+    c_spo = estimate_cardinality(store, TriplePattern(s, p, o))
+    c_sp = estimate_cardinality(store, TriplePattern(s, p, "?o"))
+    c_p = estimate_cardinality(store, TriplePattern("?s", p, "?o"))
+    c_any = estimate_cardinality(store, TriplePattern("?s", "?p", "?o"))
+    assert c_spo <= c_sp <= c_p <= c_any
+
+
+def test_plan_starts_selective(store_T):
+    store, T, ds = store_T
+    s, p, o = map(int, ds.ids[0])
+    pats = [
+        TriplePattern("?x", "?p", "?y"),  # huge
+        TriplePattern(s, p, "?x"),  # selective
+    ]
+    assert plan(store, pats)[0] == 1
+
+
+def test_two_pattern_chain_matches_oracle(store_T):
+    store, T, ds = store_T
+    # pick a triple whose object is also a subject (chain exists)
+    subs = {t[0] for t in T}
+    seed = next(t for t in T if t[2] in subs)
+    s, p, o = seed
+    pats = [TriplePattern(s, p, "?x"), TriplePattern("?x", "?q", "?y")]
+    got, keys = _got_set(execute_bgp(store, pats))
+    exp, ekeys = _oracle_bgp(T, pats)
+    assert keys == ekeys
+    assert got == exp
+
+
+def test_three_pattern_star_matches_oracle(store_T):
+    store, T, ds = store_T
+    s, p, o = map(int, ds.ids[7])
+    pats = [
+        TriplePattern(s, "?p1", "?x"),
+        TriplePattern(s, p, "?y"),
+        TriplePattern("?z", "?p2", "?x"),
+    ]
+    got, keys = _got_set(execute_bgp(store, pats))
+    exp, ekeys = _oracle_bgp(T, pats)
+    assert keys == ekeys
+    assert got == exp
+
+
+def test_empty_result(store_T):
+    store, T, ds = store_T
+    pats = [TriplePattern(ds.n_subjects, 1, "?x"), TriplePattern("?x", 1, "?y")]
+    got = execute_bgp(store, pats)
+    if got:
+        assert all(len(v) == 0 for v in got.values()) or _oracle_bgp(T, pats)[0] == _got_set(got)[0]

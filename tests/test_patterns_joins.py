@@ -1,0 +1,191 @@
+"""All 8 triple patterns + join categories A–F against a brute-force oracle."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import engine as eng, k2triples
+from repro.core.dictionary import build_dictionary
+from repro.data import rdf
+
+
+@pytest.fixture(scope="module")
+def store_and_oracle():
+    ds = rdf.generate(3000, n_subjects=120, n_preds=7, n_objects=150, seed=1)
+    store = k2triples.from_id_triples(
+        ds.ids, n_so=ds.n_so, n_subjects=ds.n_subjects,
+        n_objects=ds.n_objects, n_preds=ds.n_preds,
+    )
+    T = set(map(tuple, ds.ids.tolist()))
+    return store, T, ds
+
+
+def test_patterns_all_eight(store_and_oracle):
+    store, T, ds = store_and_oracle
+    E = eng.Engine(store, cap=1024)
+    rng = np.random.default_rng(2)
+    samples = ds.ids[rng.integers(0, ds.n_triples, 10)]
+    s, p, o = map(int, samples[3])
+
+    assert E.pattern(s, p, o) is True
+    assert E.pattern(s, p, int(ds.n_objects)) == ((s, p, ds.n_objects) in T)
+    assert set(E.pattern(s, None, o).tolist()) == {
+        pp for (ss, pp, oo) in T if ss == s and oo == o
+    }
+    assert E.pattern(s, p, None).tolist() == sorted(
+        oo for (ss, pp, oo) in T if ss == s and pp == p
+    )
+    assert E.pattern(None, p, o).tolist() == sorted(
+        ss for (ss, pp, oo) in T if pp == p and oo == o
+    )
+    exp = {}
+    for (ss, pp, oo) in T:
+        if ss == s:
+            exp.setdefault(pp, []).append(oo)
+    got = E.pattern(s, None, None)
+    assert {k: sorted(v) for k, v in exp.items()} == {k: v.tolist() for k, v in got.items()}
+    exp = {}
+    for (ss, pp, oo) in T:
+        if oo == o:
+            exp.setdefault(pp, []).append(ss)
+    got = E.pattern(None, None, o)
+    assert {k: sorted(v) for k, v in exp.items()} == {k: v.tolist() for k, v in got.items()}
+    got = E.pattern(None, p, None)
+    assert sorted(map(tuple, got.tolist())) == sorted(
+        (ss, oo) for (ss, pp, oo) in T if pp == p
+    )
+    # (?S,?P,?O): dump
+    got = E.pattern(None, None, None)
+    dumped = {(ss, pp, oo) for pp, pairs in got.items() for ss, oo in pairs.tolist()}
+    assert dumped == T
+
+
+def _side(T, p, const, vpos):
+    if vpos == "s":
+        return sorted({s for (s, pp, o) in T if (p is None or pp == p) and o == const})
+    return sorted({o for (s, pp, o) in T if (p is None or pp == p) and s == const})
+
+
+def test_joins_a_to_f(store_and_oracle):
+    store, T, ds = store_and_oracle
+    E = eng.Engine(store, cap=1024)
+    rng = np.random.default_rng(3)
+    samples = ds.ids[rng.integers(0, ds.n_triples, 4)]
+    p1, o1 = int(samples[0][1]), int(samples[0][2])
+    p2, o2 = int(samples[1][1]), int(samples[1][2])
+    s1, s2 = int(samples[0][0]), int(samples[1][0])
+
+    # A (SS / OO / SO)
+    got = E.join("A", p1=p1, c1=o1, vpos1="s", p2=p2, c2=o2, vpos2="s")
+    assert got.tolist() == sorted(set(_side(T, p1, o1, "s")) & set(_side(T, p2, o2, "s")))
+    got = E.join("A", p1=p1, c1=s1, vpos1="o", p2=p2, c2=s2, vpos2="o")
+    assert got.tolist() == sorted(set(_side(T, p1, s1, "o")) & set(_side(T, p2, s2, "o")))
+    got = E.join("A", p1=p1, c1=o1, vpos1="s", p2=p2, c2=s2, vpos2="o")
+    assert got.tolist() == sorted(set(_side(T, p1, o1, "s")) & set(_side(T, p2, s2, "o")))
+
+    # B
+    got = E.join("B", p1=p1, c1=o1, vpos1="s", c2=o2, vpos2="s")
+    l1 = set(_side(T, p1, o1, "s"))
+    exp = {}
+    for pp in range(1, ds.n_preds + 1):
+        inter = sorted(l1 & set(_side(T, pp, o2, "s")))
+        if inter:
+            exp[pp] = inter
+    assert {k: v.tolist() for k, v in got.items()} == exp
+
+    # C
+    got = E.join("C", c1=o1, vpos1="s", c2=o2, vpos2="s")
+    assert got.tolist() == sorted(set(_side(T, None, o1, "s")) & set(_side(T, None, o2, "s")))
+
+    # D
+    got = E.join("D", p1=p1, c1=o1, vpos1="s", p2=p2, vpos2="o")
+    exp = {}
+    for x in _side(T, p1, o1, "s"):
+        ys = sorted({ss for (ss, pp, oo) in T if pp == p2 and oo == x})
+        if ys:
+            exp[x] = ys
+    assert {k: v.tolist() for k, v in got.items()} == exp
+
+    # E
+    got = E.join("E", p1=p1, c1=o1, vpos1="s", vpos2="o")
+    exp = {}
+    for pp in range(1, ds.n_preds + 1):
+        d = {}
+        for x in _side(T, p1, o1, "s"):
+            ys = sorted({ss for (ss, p3, oo) in T if p3 == pp and oo == x})
+            if ys:
+                d[x] = ys
+        if d:
+            exp[pp] = d
+    assert {k: {kk: vv.tolist() for kk, vv in v.items()} for k, v in got.items()} == exp
+
+    # F
+    got = E.join("F", c1=o1, vpos1="s", vpos2="o")
+    exp = {}
+    for pp in range(1, ds.n_preds + 1):
+        d = {}
+        for x in _side(T, None, o1, "s"):
+            ys = sorted({ss for (ss, p3, oo) in T if p3 == pp and oo == x})
+            if ys:
+                d[x] = ys
+        if d:
+            exp[pp] = d
+    assert {k: {kk: vv.tolist() for kk, vv in v.items()} for k, v in got.items()} == exp
+
+
+def test_serve_step_batched(store_and_oracle):
+    store, T, ds = store_and_oracle
+    rng = np.random.default_rng(4)
+    B = 64
+    ops = rng.integers(0, 3, B).astype(np.int32)
+    ids = ds.ids[rng.integers(0, ds.n_triples, B)]
+    q = eng.ServeBatch(
+        op=jnp.asarray(ops), s=jnp.asarray(ids[:, 0], jnp.int32),
+        p=jnp.asarray(ids[:, 1], jnp.int32), o=jnp.asarray(ids[:, 2], jnp.int32),
+    )
+    serve = eng.make_serve_step(store.meta, cap=512)
+    r = serve(store.forest, q)
+    hit, rids, valid = np.asarray(r.hit), np.asarray(r.ids), np.asarray(r.valid)
+    for i in range(B):
+        s_, p_, o_ = map(int, ids[i])
+        if ops[i] == 0:
+            assert hit[i] == ((s_, p_, o_) in T)
+        elif ops[i] == 1:
+            assert rids[i][valid[i]].tolist() == sorted(
+                oo for (ss, pp, oo) in T if ss == s_ and pp == p_
+            )
+        else:
+            assert rids[i][valid[i]].tolist() == sorted(
+                ss for (ss, pp, oo) in T if pp == p_ and oo == o_
+            )
+
+
+def test_dictionary_roundtrip(store_and_oracle):
+    _, _, ds = store_and_oracle
+    strs = rdf.to_strings(ds)[:500]
+    d = build_dictionary(strs)
+    enc = d.encode_triples(strs)
+    for (st_, pt, ot), (si, pi, oi) in zip(strs, enc):
+        assert d.decode_subject(si) == st_
+        assert d.decode_predicate(pi) == pt
+        assert d.decode_object(oi) == ot
+    # SO terms shared range (paper Fig. 2)
+    assert d.n_so == len(set(t[0] for t in strs) & set(t[2] for t in strs))
+
+
+def test_string_pipeline_end_to_end():
+    text = """
+<http://ex/a> <http://ex/p1> <http://ex/b> .
+<http://ex/b> <http://ex/p1> <http://ex/c> .
+<http://ex/a> <http://ex/p2> "lit" .
+"""
+    triples = rdf.parse_n3(text)
+    store = k2triples.from_string_triples(triples)
+    E = eng.Engine(store, cap=64)
+    d = store.dictionary
+    a = d.encode_subject("http://ex/a")
+    p1 = d.encode_predicate("http://ex/p1")
+    b = d.encode_object("http://ex/b")
+    assert E.pattern(a, p1, b) is True
+    # b plays both roles -> shared SO range id
+    assert d.encode_subject("http://ex/b") == d.encode_object("http://ex/b")

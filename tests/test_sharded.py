@@ -1,0 +1,26 @@
+"""Multi-device tests (run in a subprocess so XLA_FLAGS can set a fake
+device count before jax initializes — the main pytest process stays at 1
+device for everything else)."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+DRIVER = os.path.join(os.path.dirname(__file__), "sharded_driver.py")
+
+
+@pytest.mark.parametrize("case", ["engine", "compress", "sortedset_union", "moe_shmap"])
+def test_sharded_case(case):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = (
+        os.path.join(os.path.dirname(__file__), "..", "src")
+        + os.pathsep + env.get("PYTHONPATH", "")
+    )
+    r = subprocess.run(
+        [sys.executable, DRIVER, case], env=env, capture_output=True, text=True,
+        timeout=600,
+    )
+    assert r.returncode == 0, f"{case} failed:\n{r.stdout[-3000:]}\n{r.stderr[-3000:]}"
