@@ -139,8 +139,8 @@ def run(n_triples: int = 120_000, n_preds: int = 64, n_queries: int = 50, seed=0
         _timeit(lambda p: j_p(p).block_until_ready(), 10, *args_p),
         float("nan"),
     )
-    # batched serving throughput (the production path, amortized)
-    serve = eng.make_serve_step(meta, cap=512)
+    # batched serving throughput (the production path, amortized) — once per
+    # scan backend: the Pallas k2_scan kernel vs the vmapped jnp traversal
     B = 4096
     ids = ds.ids[rng.integers(0, ds.n_triples, B)]
     q = eng.ServeBatch(
@@ -149,12 +149,14 @@ def run(n_triples: int = 120_000, n_preds: int = 64, n_queries: int = 50, seed=0
         p=jnp.asarray(ids[:, 1], jnp.int32),
         o=jnp.asarray(ids[:, 2], jnp.int32),
     )
-    serve(store.forest, q)
-    t0 = time.perf_counter()
-    for _ in range(3):
-        jax.block_until_ready(serve(store.forest, q))
-    batch_ms = (time.perf_counter() - t0) / 3 / B * 1e3
-    out["batched(all)"] = (batch_ms, float("nan"))
+    for backend in ("pallas", "jnp"):
+        serve = eng.make_serve_step(meta, cap=512, backend=backend)
+        serve(store.forest, q)
+        t0 = time.perf_counter()
+        for _ in range(3):
+            jax.block_until_ready(serve(store.forest, q))
+        batch_ms = (time.perf_counter() - t0) / 3 / B * 1e3
+        out[f"batched(all,{backend})"] = (batch_ms, float("nan"))
     return out
 
 

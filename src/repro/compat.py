@@ -1,0 +1,36 @@
+"""Version-compat shims for the supported jax range.
+
+``shard_map`` moved between namespaces across jax releases: 0.4.x exposes
+only ``jax.experimental.shard_map.shard_map`` (with a ``check_rep`` flag);
+newer releases promote it to ``jax.shard_map`` (flag renamed ``check_vma``)
+and deprecate the experimental alias.  Import it from here so every caller
+works on both — either flag spelling is accepted and translated:
+
+    from repro.compat import shard_map
+"""
+
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+try:  # newer jax: promoted to the top-level namespace
+    _impl = jax.shard_map
+except AttributeError:  # jax 0.4.x: experimental namespace only
+    from jax.experimental.shard_map import shard_map as _impl
+
+_IMPL_PARAMS = inspect.signature(_impl).parameters
+
+
+def shard_map(f, *, mesh, in_specs, out_specs,
+              check_rep=None, check_vma=None, **kw):
+    """Drop-in ``shard_map`` accepting both the old and new replication flag."""
+    flag = check_vma if check_vma is not None else check_rep
+    if flag is not None:
+        key = "check_vma" if "check_vma" in _IMPL_PARAMS else "check_rep"
+        kw[key] = flag
+    return _impl(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
+
+__all__ = ["shard_map"]

@@ -31,6 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core import joins, k2forest, patterns
 from repro.core.k2forest import K2Forest
 from repro.core.k2triples import K2TriplesStore
@@ -59,12 +60,19 @@ class ServeResult(NamedTuple):
     overflow: jax.Array  # bool[B]
 
 
-def _serve_local(meta: K2Meta, f: K2Forest, q: ServeBatch, cap: int) -> ServeResult:
-    """Resolve a batch against a (possibly local-shard) forest."""
+def _serve_local(
+    meta: K2Meta, f: K2Forest, q: ServeBatch, cap: int,
+    backend: str | None = None,
+) -> ServeResult:
+    """Resolve a batch against a (possibly local-shard) forest.
+
+    ``backend`` selects the scan substrate ("pallas" kernel / "jnp"
+    traversal; None = the ``REPRO_SCAN_BACKEND`` flag in kernels/ops.py).
+    """
     hit = k2forest.check(meta, f, q.p - 1, q.s - 1, q.o - 1) & (q.op == OP_CHECK)
     axes = jnp.where(q.op == OP_COL, 1, 0).astype(jnp.int32)
     key = jnp.where(q.op == OP_COL, q.o, q.s)
-    r = k2forest.scan_batch_mixed(meta, f, q.p - 1, key - 1, axes, cap)
+    r = k2forest.scan_batch_mixed(meta, f, q.p - 1, key - 1, axes, cap, backend)
     scan_lane = q.op != OP_CHECK
     valid = r.valid & scan_lane[:, None]
     ids = jnp.where(valid, r.ids + 1, 0)
@@ -77,12 +85,12 @@ def _serve_local(meta: K2Meta, f: K2Forest, q: ServeBatch, cap: int) -> ServeRes
     )
 
 
-def make_serve_step(meta: K2Meta, cap: int):
+def make_serve_step(meta: K2Meta, cap: int, *, backend: str | None = None):
     """Single-device jit'd serve program."""
 
     @jax.jit
     def serve_step(f: K2Forest, q: ServeBatch) -> ServeResult:
-        return _serve_local(meta, f, q, cap)
+        return _serve_local(meta, f, q, cap, backend)
 
     return serve_step
 
@@ -175,7 +183,10 @@ def make_sharded_serve_step(
             overflow=((flags >> 1) & 1).astype(jnp.bool_),
         )
 
-    fn = jax.shard_map(_local, mesh=mesh, in_specs=(fspec, qspec), out_specs=out_spec)
+    fn = shard_map(
+        _local, mesh=mesh, in_specs=(fspec, qspec), out_specs=out_spec,
+        check_vma=False,  # pallas_call has no replication rule (scan kernel)
+    )
     return jax.jit(fn)
 
 
@@ -208,7 +219,7 @@ def make_sharded_unbounded_scan(
         count = jax.lax.all_gather(count, model_axis, axis=1, tiled=True)
         return ids, valid, count
 
-    fn = jax.shard_map(
+    fn = shard_map(
         _local, mesh=mesh, in_specs=(fspec, qP, qP), out_specs=(qP, qP, qP),
         check_vma=False,  # all_gather(tiled) replication defeats VMA inference
     )

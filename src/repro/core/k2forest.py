@@ -262,8 +262,25 @@ def _axis_scan_traced(
     return QueryResult(ids=ids, valid=valid, count=count, overflow=overflow | ovf)
 
 
-def scan_batch_mixed(meta: K2Meta, f: K2Forest, preds, keys, axes, cap: int) -> QueryResult:
-    """Batched mixed row/col scans: axes[i]==0 -> row (S,P,?O), 1 -> col."""
+def scan_batch_mixed(
+    meta: K2Meta, f: K2Forest, preds, keys, axes, cap: int,
+    backend: str | None = None,
+) -> QueryResult:
+    """Batched mixed row/col scans: axes[i]==0 -> row (S,P,?O), 1 -> col.
+
+    ``backend`` selects the compute substrate: "pallas" routes to the batched
+    ``kernels.k2_scan`` TPU kernel, "jnp" to the vmapped level-synchronous
+    traversal below; None defers to ``kernels.ops.scan_backend()`` (the
+    ``REPRO_SCAN_BACKEND`` env flag, default "pallas").  Both produce
+    bit-identical QueryResults (tests/test_k2_scan.py).
+    """
+    from repro.kernels import ops  # deferred: core must import without pallas
+
+    if ops.scan_backend(backend) == "pallas":
+        ids, valid, count, overflow = ops.k2_scan_forest(
+            meta, f, preds, keys, axes, cap=cap
+        )
+        return QueryResult(ids=ids, valid=valid, count=count, overflow=overflow)
     return jax.vmap(lambda p, x, a: _axis_scan_traced(meta, f, p, x, a, cap))(
         jnp.asarray(preds), jnp.asarray(keys), jnp.asarray(axes)
     )

@@ -1,0 +1,9 @@
+"""Distribution utilities: logical-axis sharding rules + gradient compression.
+
+``sharding``  maps model-declared logical axis names ("embed", "ffn",
+              "batch", ...) onto the production mesh ("pod", "data",
+              "model") — the single place the paper's vertical partitioning
+              and the LM/GNN/recsys programs agree on placement.
+``compress``  int8 error-feedback gradient all-reduce for the slow
+              cross-pod links.
+"""

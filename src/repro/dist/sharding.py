@@ -1,0 +1,85 @@
+"""Logical-axis -> mesh-axis sharding rules.
+
+Models annotate parameters/activations with *logical* axis names
+(``transformer.logical_axes``, GNN batch fields, the k²-forest predicate
+axis); this module turns a tuple of those names into a ``PartitionSpec``
+for a concrete mesh.  Rules are overridable per shape cell
+(``ShapeSpec.rules_override``) so one arch can flip e.g. vocab-TP on and
+off without touching model code.
+
+Resolution per dimension:
+  * ``None`` or an unknown name  -> replicated;
+  * a rule value may be one mesh axis or a tuple (e.g. ("pod", "data"));
+    axes absent from the mesh are dropped (the same rules serve the
+    single-pod and multi-pod meshes);
+  * a mesh axis is used at most once per spec (first dimension wins);
+  * if the dimension size does not divide the mapped axis product, the
+    dimension falls back to replicated rather than failing to lower.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+import jax
+
+# Default placement on the production mesh (see launch/mesh.py):
+# 'model' carries TP / EP / the predicate arena; 'data' (+ 'pod') carry DP.
+DEFAULT_RULES: dict[str, object] = {
+    # activations
+    "batch": ("pod", "data"),
+    "seq_sp": "model",  # sequence-parallel residual stream
+    "kv_seq": None,
+    # LM params
+    "vocab": "model",
+    "embed": None,
+    "embed_out": None,
+    "ffn": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "experts": "model",
+    "layers": None,
+    # recsys params
+    "fields": None,
+    "rows": "model",
+    # GNN batches
+    "nodes": ("pod", "data"),
+    "edges": ("pod", "data"),
+    # engine
+    "preds": "model",
+}
+
+
+def spec_for(mesh: Mesh, names, shape=None, rules=None) -> P:
+    """PartitionSpec for logical axis ``names`` of a ``shape`` on ``mesh``."""
+    merged = dict(DEFAULT_RULES)
+    if rules:
+        merged.update(rules)
+    used: set[str] = set()
+    parts = []
+    for i, nm in enumerate(names):
+        rule = merged.get(nm) if nm is not None else None
+        if rule is None:
+            parts.append(None)
+            continue
+        axes = (rule,) if isinstance(rule, str) else tuple(rule)
+        axes = tuple(a for a in axes if a in mesh.shape and a not in used)
+        size = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+        if not axes or (shape is not None and shape[i] % size != 0):
+            parts.append(None)
+            continue
+        used.update(axes)
+        parts.append(axes if len(axes) > 1 else axes[0])
+    return P(*parts)
+
+
+def constrain_fn(mesh: Mesh, names, rules=None):
+    """A ``with_sharding_constraint`` closure for activations of ``names``."""
+
+    def constrain(x):
+        sh = NamedSharding(mesh, spec_for(mesh, names, x.shape, rules))
+        return jax.lax.with_sharding_constraint(x, sh)
+
+    return constrain

@@ -1,0 +1,205 @@
+"""Pallas TPU kernel: batched k²-tree row/col scans (the (S,P,?O)/(?S,P,O) path).
+
+This is the scan counterpart of ``k2_check``: one grid step processes a
+(BQ,)-block of queries against the **forest** arenas (``(P, W)`` padded word
+matrices — vertical partitioning's whole-arena VMEM residency; a
+dbpedia-scale forest is a few MB, within the ~16 MB/core budget).  Each query
+lane carries its own (pred, key, axis): ``axis == 0`` scans a row (direct
+neighbors, (S,P,?O)), ``axis == 1`` a column (reverse neighbors, (?S,P,O)) —
+the mixed-batch contract of ``core/k2forest.scan_batch_mixed``.
+
+The traversal is the level-synchronous frontier BFS from ``core/k2tree``,
+statically unrolled over the (tiny) tree height.  Per level, each of the
+``cap`` frontier lanes does
+
+    word   = words[pred, pos >> 5]          (2-D dynamic gather, minor dim)
+    rank   = t_rank[pred, pos >> 5] + popcount(word & mask)
+    children expand along the free axis     (frontier (cap,) -> (cap·k,))
+    compact valid children to the front     (stable: keeps ID-sorted order)
+
+Compaction is phrased as a **stable argsort of the invalid flag** followed by
+a gather — a fixed-shape, sort-network-friendly formulation (XLA lowers it to
+``lax.sort``; on TPU this is the standard bitonic path) that exactly
+reproduces the scatter-based ``_compact`` of the jnp reference, including
+which candidates survive when the frontier exceeds ``cap`` (the first ``cap``
+in free-axis order) and the zeroing of dead lanes.
+
+Outputs per query: ``ids[cap]`` (free-axis coordinates, ascending),
+``valid[cap]``, ``count`` = min(#results, cap), ``overflow`` latched if any
+level's frontier was truncated.  Bit-exact against ``ref.k2_scan_ref`` and
+``k2forest.scan_batch_mixed`` (jnp backend); validated with
+``interpret=True`` against the numpy dense oracle in ``tests/test_k2_scan.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.k2tree import K2Meta
+
+
+def _bit_at(words2d: jax.Array, pred2d: jax.Array, pos: jax.Array) -> jax.Array:
+    """Gather bit ``pos`` of tree ``pred`` from a (P, W) word arena."""
+    widx = jnp.clip(pos >> 5, 0, words2d.shape[-1] - 1)
+    word = words2d[pred2d, widx]
+    return ((word >> (pos & 31).astype(jnp.uint32)) & jnp.uint32(1)).astype(jnp.int32)
+
+
+def _rank_at(
+    words2d: jax.Array, rank2d: jax.Array, pred2d: jax.Array, pos: jax.Array
+) -> jax.Array:
+    widx = jnp.clip(pos >> 5, 0, words2d.shape[-1] - 1)
+    word = words2d[pred2d, widx]
+    base = rank2d[pred2d, widx]
+    mask = (jnp.uint32(1) << (pos & 31).astype(jnp.uint32)) - jnp.uint32(1)
+    return base + jax.lax.population_count(word & mask).astype(jnp.int32)
+
+
+def _compact_rows(valid: jax.Array, cap: int, *arrays: jax.Array):
+    """Stable per-row compaction (BQ, N) -> (BQ, cap), valid lanes first.
+
+    Matches ``core.k2tree._compact`` exactly: survivors are the first
+    min(#valid, cap) valid candidates in lane order; dropped/dead slots are
+    zeroed.  Phrased as stable argsort + gather instead of scatter-drop.
+    """
+    order = jnp.argsort(~valid, axis=-1, stable=True)[:, :cap]
+    n = jnp.minimum(valid.sum(axis=-1), cap).astype(jnp.int32)
+    new_valid = jnp.arange(cap, dtype=jnp.int32)[None, :] < n[:, None]
+    outs = tuple(
+        jnp.where(new_valid, jnp.take_along_axis(a, order, axis=-1), 0)
+        for a in arrays
+    )
+    overflow = valid.sum(axis=-1) > cap
+    return new_valid, n, overflow, outs
+
+
+def _make_scan_kernel(meta: K2Meta, cap: int):
+    H = meta.n_levels
+    ks = meta.ks
+    radices = meta.radices
+    subsides = meta.subsides
+
+    def kernel(preds_ref, keys_ref, axes_ref, t_words_ref, t_rank_ref,
+               l_words_ref, ones_before_ref, level_start_ref,
+               ids_ref, valid_ref, count_ref, ovf_ref):
+        preds = preds_ref[...]                       # (BQ,)
+        keys = keys_ref[...]
+        is_row = axes_ref[...] == 0
+        t_words = t_words_ref[...]                   # (P, Wt) — whole arena
+        t_rank = t_rank_ref[...]
+        l_words = l_words_ref[...]
+        ones_before = ones_before_ref[...]           # (P, max(H-1,1))
+        level_start = level_start_ref[...]           # (P, H)
+        bq = preds.shape[0]
+        p2 = jnp.broadcast_to(preds[:, None], (bq, cap))
+
+        # per-level digit of the bound coordinate (static unroll)
+        fdig = []
+        rem = keys
+        for sub in subsides:
+            fdig.append(rem // sub)
+            rem = rem % sub
+
+        # level-0 frontier: the k0 children of the root along the free axis
+        k0, sub0 = ks[0], subsides[0]
+        init_n = min(k0, cap)
+        lane = jnp.arange(cap, dtype=jnp.int32)
+        on = lane < init_n
+        j0 = jnp.minimum(lane, init_n - 1)[None, :]
+        p0 = jnp.where(is_row[:, None], fdig[0][:, None] * k0 + j0,
+                       j0 * k0 + fdig[0][:, None])
+        pos = jnp.where(on[None, :], p0, 0).astype(jnp.int32)
+        base = jnp.broadcast_to(
+            jnp.where(on[None, :], j0 * sub0, 0), (bq, cap)
+        ).astype(jnp.int32)
+        valid = jnp.broadcast_to(on[None, :], (bq, cap))
+        overflow = jnp.full((bq,), k0 > cap, jnp.bool_)
+
+        words0 = l_words if H == 1 else t_words
+        valid = valid & (_bit_at(words0, p2, pos) == 1)
+
+        for lvl in range(H - 1):
+            last_child = lvl + 1 == H - 1
+            k = ks[lvl + 1]
+            r = radices[lvl + 1]
+            sub = subsides[lvl + 1]
+            j = _rank_at(t_words, t_rank, p2, pos) - ones_before[preds, lvl][:, None]
+            child_base0 = level_start[preds, lvl + 1][:, None] + j * r
+            ch = jnp.arange(k, dtype=jnp.int32)[None, None, :]
+            cpos = child_base0[:, :, None] + jnp.where(
+                is_row[:, None, None],
+                fdig[lvl + 1][:, None, None] * k + ch,
+                ch * k + fdig[lvl + 1][:, None, None],
+            )
+            cbase = base[:, :, None] + ch * sub
+            wordsc = l_words if last_child else t_words
+            cpos_safe = jnp.where(valid[:, :, None], cpos, 0).reshape(bq, cap * k)
+            cbit = _bit_at(wordsc, jnp.broadcast_to(preds[:, None], (bq, cap * k)),
+                           cpos_safe)
+            cvalid = valid[:, :, None].repeat(k, axis=2).reshape(bq, cap * k) & (cbit == 1)
+            valid, _, ovf, (pos, base) = _compact_rows(
+                cvalid, cap, cpos_safe, cbase.reshape(bq, cap * k)
+            )
+            overflow = overflow | ovf
+            pos = jnp.where(valid, pos, 0)
+
+        valid, count, ovf, (ids,) = _compact_rows(valid, cap, base)
+        ids_ref[...] = ids
+        valid_ref[...] = valid
+        count_ref[...] = count
+        ovf_ref[...] = overflow | ovf
+
+    return kernel
+
+
+@functools.partial(
+    jax.jit, static_argnames=("meta", "cap", "block_q", "interpret")
+)
+def k2_scan(
+    meta: K2Meta,
+    preds: jax.Array,
+    keys: jax.Array,
+    axes: jax.Array,
+    t_words: jax.Array,
+    t_rank: jax.Array,
+    l_words: jax.Array,
+    ones_before: jax.Array,
+    level_start: jax.Array,
+    *,
+    cap: int,
+    block_q: int = 256,
+    interpret: bool = False,
+):
+    """Batched mixed row/col scans over a K2Forest arena.
+
+    Returns ``(ids, valid, count, overflow)`` with shapes
+    ``(Q, cap) / (Q, cap) / (Q,) / (Q,)``.  Q must divide by block_q.
+    """
+    (q,) = preds.shape
+    assert q % block_q == 0, (q, block_q)
+    grid = (q // block_q,)
+    whole = lambda a: pl.BlockSpec(a.shape, lambda i: tuple(0 for _ in a.shape))
+    qvec = pl.BlockSpec((block_q,), lambda i: (i,))
+    qmat = pl.BlockSpec((block_q, cap), lambda i: (i, 0))
+    return pl.pallas_call(
+        _make_scan_kernel(meta, cap),
+        grid=grid,
+        in_specs=[
+            qvec, qvec, qvec,
+            whole(t_words), whole(t_rank), whole(l_words),
+            whole(ones_before), whole(level_start),
+        ],
+        out_specs=(qmat, qmat, qvec, qvec),
+        out_shape=(
+            jax.ShapeDtypeStruct((q, cap), jnp.int32),
+            jax.ShapeDtypeStruct((q, cap), jnp.bool_),
+            jax.ShapeDtypeStruct((q,), jnp.int32),
+            jax.ShapeDtypeStruct((q,), jnp.bool_),
+        ),
+        interpret=interpret,
+    )(preds.astype(jnp.int32), keys.astype(jnp.int32), axes.astype(jnp.int32),
+      t_words, t_rank, l_words, ones_before, level_start)

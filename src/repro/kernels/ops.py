@@ -1,8 +1,24 @@
 """Public jit'd entry points for the kernel layer.
 
-``INTERPRET`` flips every kernel into Pallas interpret mode — the CPU
-correctness path used by this container (TPU is the compile target).  On a
-real TPU backend set ``REPRO_PALLAS_INTERPRET=0`` (the default there).
+Environment flags (read once at import):
+
+``REPRO_PALLAS_INTERPRET``
+    "1" (default off-TPU) flips every Pallas kernel into interpret mode —
+    the CPU correctness path used by this container (TPU is the compile
+    target).  On a real TPU backend set ``REPRO_PALLAS_INTERPRET=0`` (the
+    default there: interpret only engages when the backend is not TPU).
+
+``REPRO_SCAN_BACKEND``
+    Selects the implementation behind ``core.k2forest.scan_batch_mixed``
+    (the (S,P,?O)/(?S,P,O) serve hot path):
+
+      * ``"pallas"`` (default) — the batched ``k2_scan`` kernel
+        (``kernels/k2_scan.py``): whole-arena VMEM residency, one grid step
+        per query block.
+      * ``"jnp"`` — the vmapped pure-jnp level-synchronous traversal
+        (the pre-kernel path; also the differential reference).
+
+    Callers can override per-call via the ``backend=`` keyword.
 """
 
 from __future__ import annotations
@@ -15,12 +31,23 @@ import jax.numpy as jnp
 from repro.core.k2tree import K2Meta, K2Tree
 from repro.kernels import block_spmm as _bs
 from repro.kernels import k2_check as _kc
+from repro.kernels import k2_scan as _ks
 from repro.kernels import popcount as _pc
 from repro.kernels import sorted_intersect as _si
 
 INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0" and (
     jax.default_backend() != "tpu"
 )
+
+SCAN_BACKEND = os.environ.get("REPRO_SCAN_BACKEND", "pallas")
+
+
+def scan_backend(override: str | None = None) -> str:
+    """Resolve the scan backend ("pallas" | "jnp")."""
+    b = override or SCAN_BACKEND
+    if b not in ("pallas", "jnp"):
+        raise ValueError(f"unknown scan backend {b!r} (want 'pallas' or 'jnp')")
+    return b
 
 
 def popcount(words: jax.Array, *, block_m: int = 8) -> jax.Array:
@@ -41,6 +68,42 @@ def k2_check_tree(
         tree.ones_before, tree.level_start, block_q=block_q, interpret=INTERPRET,
     )
     return out[:q]
+
+
+def k2_scan_forest(
+    meta: K2Meta,
+    forest,
+    preds: jax.Array,
+    keys: jax.Array,
+    axes: jax.Array,
+    *,
+    cap: int,
+    block_q: int = 256,
+):
+    """Kernel-backed batched mixed row/col scan over a K2Forest.
+
+    Drop-in compute for ``core.k2forest.scan_batch_mixed`` (which routes
+    here when the scan backend is "pallas").  Queries are padded up to a
+    ``block_q`` multiple; padded lanes traverse tree 0 at key 0 and are
+    sliced off before returning.  Returns (ids, valid, count, overflow).
+    """
+    (q,) = jnp.shape(preds)
+    bq = min(block_q, max(1, q))
+    pad = (-q) % bq
+    preds = jnp.asarray(preds, jnp.int32)
+    keys = jnp.asarray(keys, jnp.int32)
+    axes = jnp.asarray(axes, jnp.int32)
+    if pad:
+        preds = jnp.pad(preds, (0, pad))
+        keys = jnp.pad(keys, (0, pad))
+        axes = jnp.pad(axes, (0, pad))
+    ids, valid, count, overflow = _ks.k2_scan(
+        meta, preds, keys, axes,
+        forest.t_words, forest.t_rank, forest.l_words,
+        forest.ones_before, forest.level_start,
+        cap=cap, block_q=bq, interpret=INTERPRET,
+    )
+    return ids[:q], valid[:q], count[:q], overflow[:q]
 
 
 def sorted_intersect_mask(a_ids: jax.Array, b_ids: jax.Array) -> jax.Array:

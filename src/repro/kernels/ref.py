@@ -46,6 +46,73 @@ def k2_check_ref(
     return alive
 
 
+def k2_scan_ref(
+    meta: K2Meta,
+    preds: jax.Array,
+    keys: jax.Array,
+    axes: jax.Array,
+    t_words: jax.Array,
+    t_rank: jax.Array,
+    l_words: jax.Array,
+    ones_before: jax.Array,
+    level_start: jax.Array,
+    *,
+    cap: int,
+):
+    """Identical semantics to kernels.k2_scan, phrased on raw forest arrays.
+
+    Deliberately uses the scatter-based ``_compact`` (vs the kernel's stable
+    argsort) so kernel-vs-ref agreement checks two independent compaction
+    algorithms.  Returns (ids, valid, count, overflow).
+    """
+    from repro.core.k2tree import _compact, _row_digits
+
+    H = meta.n_levels
+
+    def one(pred, key, axis):
+        pred = pred.astype(jnp.int32)
+        is_row = axis.astype(jnp.int32) == 0
+        fdig = _row_digits(meta, key.astype(jnp.int32))
+        k0, sub0 = meta.ks[0], meta.subsides[0]
+        init_n = min(k0, cap)
+        j0 = jnp.arange(init_n, dtype=jnp.int32)
+        p0 = jnp.where(is_row, fdig[0] * k0 + j0, j0 * k0 + fdig[0])
+        pos = jnp.zeros((cap,), jnp.int32).at[:init_n].set(p0)
+        base = jnp.zeros((cap,), jnp.int32).at[:init_n].set(j0 * sub0)
+        valid = jnp.zeros((cap,), jnp.bool_).at[:init_n].set(True)
+        overflow = jnp.asarray(k0 > cap)
+
+        words0 = l_words if H == 1 else t_words
+        valid = valid & (bitvec.get_bit_2d(words0, pred, pos) == 1)
+
+        for lvl in range(H - 1):
+            last_child = lvl + 1 == H - 1
+            k, r, sub = meta.ks[lvl + 1], meta.radices[lvl + 1], meta.subsides[lvl + 1]
+            j = bitvec.rank1_2d(t_words, t_rank, pred, pos) - ones_before[pred, lvl]
+            child_base0 = level_start[pred, lvl + 1] + j * r
+            ch = jnp.arange(k, dtype=jnp.int32)
+            cpos = child_base0[:, None] + jnp.where(
+                is_row, fdig[lvl + 1] * k + ch[None, :], ch[None, :] * k + fdig[lvl + 1]
+            )
+            cbase = base[:, None] + ch[None, :] * sub
+            wordsc = l_words if last_child else t_words
+            cbit = bitvec.get_bit_2d(wordsc, pred, jnp.where(valid[:, None], cpos, 0))
+            cvalid = valid[:, None] & (cbit == 1)
+            valid, _, ovf, (pos, base) = _compact(
+                cvalid.reshape(-1), cap, cpos.reshape(-1), cbase.reshape(-1)
+            )
+            overflow = overflow | ovf
+            pos = jnp.where(valid, pos, 0)
+
+        valid, count, ovf, (ids,) = _compact(valid, cap, base)
+        return ids, valid, count, overflow | ovf
+
+    return jax.vmap(one)(
+        jnp.asarray(preds, jnp.int32), jnp.asarray(keys, jnp.int32),
+        jnp.asarray(axes, jnp.int32),
+    )
+
+
 def sorted_intersect_mask_ref(a_ids: jax.Array, b_ids: jax.Array) -> jax.Array:
     pos = jnp.searchsorted(b_ids, a_ids)
     got = jnp.take(b_ids, jnp.clip(pos, 0, b_ids.shape[0] - 1), mode="clip")

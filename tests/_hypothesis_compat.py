@@ -1,0 +1,132 @@
+"""``hypothesis`` when installed, else a seeded-example fallback.
+
+The tier-1 suite must collect and run in hermetic containers with no
+network.  When the real library is importable we re-export it untouched
+(full shrinking/fuzzing).  Otherwise a minimal shim drives each ``@given``
+test from deterministic draws: ``max_examples`` examples per test, each
+seeded from (test name, example index), so failures reproduce exactly.
+
+Only the API surface this repo uses is emulated:
+
+    @settings(max_examples=N, deadline=None)
+    @given(st.integers(...), st.booleans(), st.lists(...), st.data())
+
+Usage in test modules:
+
+    from _hypothesis_compat import given, settings, st
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # ------------------------------------------------- shim
+    import functools
+    import inspect
+    import zlib
+
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+    _DEFAULT_EXAMPLES = 10
+
+    class _Strategy:
+        def example(self, rng):  # pragma: no cover - interface
+            raise NotImplementedError
+
+    class _Integers(_Strategy):
+        def __init__(self, min_value, max_value):
+            self.lo, self.hi = min_value, max_value
+
+        def example(self, rng):
+            return int(rng.integers(self.lo, self.hi, endpoint=True))
+
+    class _Booleans(_Strategy):
+        def example(self, rng):
+            return bool(rng.integers(0, 2))
+
+    class _Lists(_Strategy):
+        def __init__(self, elem, min_size=0, max_size=None):
+            self.elem = elem
+            self.min_size = min_size
+            self.max_size = max_size if max_size is not None else min_size + 10
+
+        def example(self, rng):
+            n = int(rng.integers(self.min_size, self.max_size, endpoint=True))
+            return [self.elem.example(rng) for _ in range(n)]
+
+    class _DataStrategy(_Strategy):
+        pass
+
+    class _DataObject:
+        """Mid-test draws: ``data.draw(st.integers(...))``."""
+
+        def __init__(self, rng):
+            self._rng = rng
+
+        def draw(self, strategy, label=None):
+            return strategy.example(self._rng)
+
+    class _St:
+        @staticmethod
+        def integers(min_value=0, max_value=2**31 - 1):
+            return _Integers(min_value, max_value)
+
+        @staticmethod
+        def booleans():
+            return _Booleans()
+
+        @staticmethod
+        def lists(elem, min_size=0, max_size=None):
+            return _Lists(elem, min_size=min_size, max_size=max_size)
+
+        @staticmethod
+        def data():
+            return _DataStrategy()
+
+    st = _St()
+    strategies = st
+
+    def settings(max_examples=_DEFAULT_EXAMPLES, deadline=None, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*strats):
+        def deco(fn):
+            # strategies fill the RIGHTMOST params (hypothesis semantics);
+            # bind them by NAME so pytest fixtures (passed as kwargs) and
+            # drawn values can never collide
+            strat_names = list(inspect.signature(fn).parameters)[-len(strats):]
+
+            @functools.wraps(fn)
+            def run(*fixture_args, **fixture_kw):
+                n = getattr(run, "_max_examples", _DEFAULT_EXAMPLES)
+                name_seed = zlib.crc32(fn.__qualname__.encode())
+                for ex in range(n):
+                    rng = np.random.default_rng((name_seed, ex))
+                    drawn = {
+                        nm: (_DataObject(rng) if isinstance(s, _DataStrategy)
+                             else s.example(rng))
+                        for nm, s in zip(strat_names, strats)
+                    }
+                    try:
+                        fn(*fixture_args, **fixture_kw, **drawn)
+                    except Exception as e:  # reproduce: same seed tuple
+                        raise AssertionError(
+                            f"{fn.__qualname__} failed on fallback example "
+                            f"{ex} (seed=({name_seed}, {ex})): {e!r}"
+                        ) from e
+
+            # expose only the leftover (fixture) params to pytest
+            sig = inspect.signature(fn)
+            params = list(sig.parameters.values())[: -len(strats) or None]
+            run.__signature__ = sig.replace(parameters=params)
+            del run.__wrapped__  # keep pytest off the original signature
+            return run
+
+        return deco

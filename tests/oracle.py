@@ -1,0 +1,69 @@
+"""Shared numpy dense-matrix oracles for the k² differential test harness.
+
+Ground truth for every traversal variant is the uncompressed boolean matrix:
+a scan's full answer is one ``np.nonzero`` away.  The capped fixed-shape
+``QueryResult`` contract then admits exactly one correct behavior, asserted
+by ``assert_scan_result``:
+
+  * every returned id is a true 1-cell (no false positives, ever);
+  * results arrive ID-sorted and ``valid`` is a count-prefix mask;
+  * ``overflow=False``  =>  the answer is complete and count is exact;
+  * ``overflow=True``   =>  the returned ids are a PREFIX of the sorted
+    truth (level-synchronous truncation keeps the lowest free-axis
+    subtrees, whose ids all precede any dropped subtree's ids).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def dense_from_coords(coords, side: int) -> list[np.ndarray]:
+    """One dense uint8 matrix per predicate from (rows, cols) lists."""
+    out = []
+    for rows, cols in coords:
+        d = np.zeros((side, side), np.uint8)
+        if len(rows):
+            d[np.asarray(rows), np.asarray(cols)] = 1
+        out.append(d)
+    return out
+
+
+def scan_truth(dense: np.ndarray, key: int, axis: int) -> np.ndarray:
+    """Sorted ids of the 1-cells in row (axis=0) / column (axis=1) ``key``."""
+    line = dense[key] if axis == 0 else dense[:, key]
+    return np.nonzero(line)[0].astype(np.int32)
+
+
+def assert_scan_result(ids, valid, count, overflow, truth: np.ndarray, cap: int,
+                       label=""):
+    """Check one capped scan result against the dense truth."""
+    ids = np.asarray(ids)
+    valid = np.asarray(valid)
+    count = int(count)
+    overflow = bool(overflow)
+    assert count <= cap, f"{label}: count {count} > cap {cap}"
+    assert count <= len(truth), f"{label}: count {count} > truth {len(truth)}"
+    # valid is exactly the count-prefix mask; dead lanes are zeroed
+    assert (valid == (np.arange(cap) < count)).all(), f"{label}: valid mask"
+    assert (ids[~valid] == 0).all(), f"{label}: dead lanes not zeroed"
+    # returned ids are a prefix of the sorted truth
+    assert (ids[:count] == truth[:count]).all(), (
+        f"{label}: ids {ids[:count]} != truth prefix {truth[:count]}"
+    )
+    if not overflow:
+        assert count == len(truth), (
+            f"{label}: no overflow but count {count} != |truth| {len(truth)}"
+        )
+
+
+def assert_results_identical(a, b, label=""):
+    """Bit-exact agreement between two (ids, valid, count, overflow) tuples."""
+    names = ("ids", "valid", "count", "overflow")
+    for name, x, y in zip(names, a, b):
+        x, y = np.asarray(x), np.asarray(y)
+        assert x.shape == y.shape, f"{label}:{name} shape {x.shape} vs {y.shape}"
+        same = x == y
+        assert np.asarray(same).all(), (
+            f"{label}:{name} differs at {np.transpose(np.nonzero(~same))[:5]}"
+        )

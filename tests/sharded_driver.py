@@ -13,6 +13,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
+
 
 def case_engine():
     """Predicate-sharded serve step == single-device answers."""
@@ -80,7 +82,7 @@ def case_compress():
     g_all = rng.standard_normal((8, 256)).astype(np.float32)
 
     fn = jax.jit(
-        jax.shard_map(
+        shard_map(
             lambda g, e: compress.compress_decompress_psum(g, e, "data"),
             mesh=mesh, in_specs=(P("data"), P("data")), out_specs=(P("data"), P("data")),
         )

@@ -2,7 +2,7 @@
 
 import numpy as np
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import k2tree
 from repro.core.k2tree import K2Meta, hybrid_ks
