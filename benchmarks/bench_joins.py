@@ -20,7 +20,8 @@ from repro.core import joins, k2triples
 from repro.data import rdf
 
 
-def run(n_triples: int = 60_000, n_preds: int = 32, n_each: int = 10, seed=0):
+def run(n_triples: int = 60_000, n_preds: int = 32, n_each: int = 10, seed=0,
+        backends=("pallas", "jnp")):
     ds = rdf.generate(
         n_triples, n_subjects=n_triples // 12, n_preds=n_preds,
         n_objects=n_triples // 8, seed=seed,
@@ -34,36 +35,37 @@ def run(n_triples: int = 60_000, n_preds: int = 32, n_each: int = 10, seed=0):
     rng = np.random.default_rng(seed + 1)
     qs = ds.ids[rng.integers(0, ds.n_triples, 2 * n_each)]
 
-    jit = jax.jit
-    fns = {
-        "A": jit(lambda p1, c1, p2, c2: joins.join_a(meta, f, p1, c1, "s", p2, c2, "s", cap).ids),
-        "B": jit(lambda p1, c1, c2: joins.join_b(meta, f, p1, c1, "s", c2, "s", cap).ids),
-        "C": jit(lambda c1, c2: joins.join_c(meta, f, c1, "s", c2, "s", cap).ids),
-        "D": jit(lambda p1, c1, p2: joins.join_d(meta, f, p1, c1, "s", p2, "o", cap, cap_y).y_ids),
-        "E": jit(lambda p1, c1: joins.join_e(meta, f, p1, c1, "s", "o", cap, cap_y).y_ids),
-        "F": jit(lambda c1: joins.join_f(meta, f, c1, "s", "o", cap, cap_y).y_ids),
-    }
     out = {}
-    for cat, fn in fns.items():
-        times = []
-        for i in range(n_each):
-            s1, p1, o1 = map(int, qs[2 * i])
-            s2, p2, o2 = map(int, qs[2 * i + 1])
-            args = {
-                "A": (p1, o1, p2, o2), "B": (p1, o1, o2), "C": (o1, o2),
-                "D": (p1, o1, p2), "E": (p1, o1), "F": (o1,),
-            }[cat]
-            if i == 0:
-                jax.block_until_ready(fn(*args))  # compile
-            t0 = time.perf_counter()
-            jax.block_until_ready(fn(*args))
-            times.append(time.perf_counter() - t0)
-        out[cat] = float(np.mean(times) * 1e3)
+    for be in backends:
+        jit = jax.jit
+        fns = {
+            "A": jit(lambda p1, c1, p2, c2: joins.join_a(meta, f, p1, c1, "s", p2, c2, "s", cap, be).ids),
+            "B": jit(lambda p1, c1, c2: joins.join_b(meta, f, p1, c1, "s", c2, "s", cap, be).ids),
+            "C": jit(lambda c1, c2: joins.join_c(meta, f, c1, "s", c2, "s", cap, be).ids),
+            "D": jit(lambda p1, c1, p2: joins.join_d(meta, f, p1, c1, "s", p2, "o", cap, cap_y, be).y_ids),
+            "E": jit(lambda p1, c1: joins.join_e(meta, f, p1, c1, "s", "o", cap, cap_y, be).y_ids),
+            "F": jit(lambda c1: joins.join_f(meta, f, c1, "s", "o", cap, cap_y, be).y_ids),
+        }
+        for cat, fn in fns.items():
+            times = []
+            for i in range(n_each):
+                s1, p1, o1 = map(int, qs[2 * i])
+                s2, p2, o2 = map(int, qs[2 * i + 1])
+                args = {
+                    "A": (p1, o1, p2, o2), "B": (p1, o1, o2), "C": (o1, o2),
+                    "D": (p1, o1, p2), "E": (p1, o1), "F": (o1,),
+                }[cat]
+                if i == 0:
+                    jax.block_until_ready(fn(*args))  # compile
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn(*args))
+                times.append(time.perf_counter() - t0)
+            out[f"{cat}[{be}]"] = float(np.mean(times) * 1e3)
     return out
 
 
 def main(csv=print):
-    csv("# Table 4 analogue: ms/query by join category")
+    csv("# Table 4 analogue: ms/query by join category x scan backend")
     csv("category,ms_per_query")
     for k, v in run().items():
         csv(f"{k},{v:.2f}")

@@ -84,6 +84,40 @@ def run():
                  f"{arena_kib:.0f} KiB -> VMEM-resident; "
                  f"agrees bit-exact with jnp ref (tests/test_k2_scan.py)"))
 
+    # k2_range: batched (?S,P,?O) pair enumeration (dataset-dump path)
+    rcap = 512
+    rq = jnp.asarray(rng.integers(0, 8, 64), jnp.int32)
+    f_rj = jax.jit(lambda p: k2forest.range_scan_batch(
+        smeta, forest, p, rcap, backend="jnp").rows)
+    t = _t(f_rj, rq, n=3)
+    rows.append(("k2_range(jnp-ref)", t * 1e3,
+                 f"{rq.size/t:.0f} trees/s cpu (cap {rcap}, Morton order)"))
+    f_rp = jax.jit(lambda p: k2forest.range_scan_batch(
+        smeta, forest, p, rcap, backend="pallas").rows)
+    t_rp = _t(f_rp, rq, n=3)
+    rows.append(("k2_range(pallas-interp)", t_rp * 1e3,
+                 f"{rq.size/t_rp:.0f} trees/s cpu; agrees bit-exact with jnp "
+                 f"ref (tests/test_k2_range.py)"))
+
+    # k2_scan_rebind: fused X-scan + re-bind (join categories D-F)
+    jq, jcx, jcy = 16, 64, 32
+    jp1 = jnp.asarray(rng.integers(0, 8, jq), jnp.int32)
+    jk1 = jnp.asarray(rng.integers(0, scan_side, jq), jnp.int32)
+    ja1 = jnp.asarray(rng.integers(0, 2, jq), jnp.int32)
+    jp2 = jnp.asarray(rng.integers(0, 8, jq), jnp.int32)
+    ja2 = jnp.asarray(rng.integers(0, 2, jq), jnp.int32)
+    f_bj = jax.jit(lambda *a: k2forest.scan_rebind_batch(
+        smeta, forest, *a, jcx, jcy, "jnp")[4])
+    t = _t(f_bj, jp1, jk1, ja1, jp2, ja2, n=3)
+    rows.append(("k2_scan_rebind(jnp-ref)", t * 1e3,
+                 f"{jq/t:.0f} joins/s cpu (cap_x {jcx}, cap_y {jcy})"))
+    f_bp = jax.jit(lambda *a: k2forest.scan_rebind_batch(
+        smeta, forest, *a, jcx, jcy, "pallas")[4])
+    t_bp = _t(f_bp, jp1, jk1, ja1, jp2, ja2, n=3)
+    rows.append(("k2_scan_rebind(pallas-interp)", t_bp * 1e3,
+                 f"{jq/t_bp:.0f} joins/s cpu; fused scan->rebind, no host "
+                 f"round-trip; bit-exact vs jnp (tests/test_joins_kernel.py)"))
+
     # sorted_intersect
     a = jnp.asarray(np.sort(rng.choice(10**7, 2**16, replace=False)).astype(np.int32))
     b = jnp.asarray(np.sort(rng.choice(10**7, 2**18, replace=False)).astype(np.int32))

@@ -102,7 +102,6 @@ def run(n_triples: int = 120_000, n_preds: int = 64, n_queries: int = 50, seed=0
     j_s_o = jax.jit(lambda s, o: patterns.s_any_o(meta, f, s, o))
     j_s = jax.jit(lambda s: patterns.s_any_any(meta, f, s, cap).ids)
     j_o = jax.jit(lambda o: patterns.any_any_o(meta, f, o, cap).ids)
-    j_p = jax.jit(lambda p: patterns.any_p_any(meta, f, p, cap).rows)
 
     out = {}
     out["(S,P,O)"] = (
@@ -135,10 +134,15 @@ def run(n_triples: int = 120_000, n_preds: int = 64, n_queries: int = 50, seed=0
         _timeit(vt.any_any_o, 10, *args_o),
     )
     args_p = [(p,) for s, p, o in args_spo]
-    out["(?S,P,?O)"] = (
-        _timeit(lambda p: j_p(p).block_until_ready(), 10, *args_p),
-        float("nan"),
-    )
+    # range scan is backend-routed like the row/col scans: time both paths
+    for backend in ("pallas", "jnp"):
+        j_p_be = jax.jit(
+            lambda p, be=backend: patterns.any_p_any(meta, f, p, cap, be).rows
+        )
+        out[f"(?S,P,?O)[{backend}]"] = (
+            _timeit(lambda p, jf=j_p_be: jf(p).block_until_ready(), 10, *args_p),
+            float("nan"),
+        )
     # batched serving throughput (the production path, amortized) — once per
     # scan backend: the Pallas k2_scan kernel vs the vmapped jnp traversal
     B = 4096

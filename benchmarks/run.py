@@ -55,7 +55,7 @@ def _patterns_fast():
 def _joins_fast():
     from benchmarks import bench_joins
 
-    print("# Table 4 analogue: ms/query by join category")
+    print("# Table 4 analogue: ms/query by join category x scan backend")
     print("category,ms_per_query")
     for k, v in bench_joins.run(n_triples=20_000, n_preds=12, n_each=5).items():
         print(f"{k},{v:.2f}")

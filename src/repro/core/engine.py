@@ -191,13 +191,17 @@ def make_sharded_serve_step(
 
 
 def make_sharded_unbounded_scan(
-    meta: K2Meta, mesh: Mesh, cap: int, *, data_axes=("data",), model_axis="model"
+    meta: K2Meta, mesh: Mesh, cap: int, *, data_axes=("data",), model_axis="model",
+    backend: str | None = None,
 ):
     """(S,?P,?O) / (?S,?P,O) batch: every shard scans its LOCAL predicates,
     results all-gathered over the model axis -> [B, P_padded, cap].
 
     This is the paper's vertical-partitioning worst case turned into an
-    embarrassingly parallel sweep.
+    embarrassingly parallel sweep.  The local sweep is one flat
+    (b · P_loc)-query ``scan_batch_mixed`` launch, so it follows the
+    ``REPRO_SCAN_BACKEND`` flag (Pallas kernel / jnp reference) like the
+    bounded-predicate serve path.
     """
     dax = data_axes if len(data_axes) > 1 else data_axes[0]
     qP = P(dax)
@@ -205,15 +209,17 @@ def make_sharded_unbounded_scan(
 
     def _local(f_loc: K2Forest, keys: jax.Array, axes: jax.Array):
         p_loc = f_loc.t_words.shape[0]
-
-        def one(key, axis):
-            preds = jnp.arange(p_loc, dtype=jnp.int32)
-            r = jax.vmap(
-                lambda pp: k2forest._axis_scan_traced(meta, f_loc, pp, key - 1, axis, cap)
-            )(preds)
-            return jnp.where(r.valid, r.ids + 1, 0), r.valid, r.count
-
-        ids, valid, count = jax.vmap(one)(keys, axes)  # [b, p_loc, cap]
+        b = keys.shape[0]
+        # the all-preds sweep as one batched mixed scan with broadcast keys
+        preds_f = jnp.tile(jnp.arange(p_loc, dtype=jnp.int32), b)
+        keys_f = jnp.repeat(keys - 1, p_loc)
+        axes_f = jnp.repeat(axes, p_loc)
+        r = k2forest.scan_batch_mixed(
+            meta, f_loc, preds_f, keys_f, axes_f, cap, backend
+        )
+        ids = jnp.where(r.valid, r.ids + 1, 0).reshape(b, p_loc, cap)
+        valid = r.valid.reshape(b, p_loc, cap)
+        count = r.count.reshape(b, p_loc)
         ids = jax.lax.all_gather(ids, model_axis, axis=1, tiled=True)
         valid = jax.lax.all_gather(valid, model_axis, axis=1, tiled=True)
         count = jax.lax.all_gather(count, model_axis, axis=1, tiled=True)

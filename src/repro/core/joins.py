@@ -12,15 +12,27 @@ categories follow the paper:
   F — D with two unbounded predicates                       -> E per predicate
 
 Every function is jit-able: inputs are scalar IDs (1-based), outputs are
-fixed-capacity IdSet / JoinPairs with validity masks.  ``vpos`` ∈ {"s","o"}
-names which position of a pattern holds the join variable; the SS/OO/SO kind
-is implied by (vpos1, vpos2).  Cross (SO) joins rely on the dictionary's
-shared [1,|SO|] range — IDs are directly comparable.
+fixed-capacity IdSet / IdSetsPerPred / JoinPairs with validity masks.
+``vpos`` ∈ {"s","o"} names which position of a pattern holds the join
+variable; the SS/OO/SO kind is implied by (vpos1, vpos2).  Cross (SO) joins
+rely on the dictionary's shared [1,|SO|] range — IDs are directly comparable.
+
+Every traversal routes through the ``core.k2forest`` batch entry points, so
+the whole join pipeline follows the ``REPRO_SCAN_BACKEND`` flag (or the
+per-call ``backend=`` keyword): "pallas" runs the batched ``k2_scan`` /
+fused ``k2_scan_rebind`` kernels, "jnp" the vmapped reference traversal —
+bit-identical outputs either way (tests/test_joins_kernel.py).
+
+Overflow is tracked per predicate wherever a predicate axis exists
+(``PerPredSets.overflow[P]``, ``JoinPairs.overflow[P]`` for E/F): a caller
+can tell WHICH predicate's lane was truncated instead of losing that to a
+single collapsed scalar.  Rebind overflow is masked by the X lane's
+validity first — a clamped dead lane's scan cannot latch a phantom
+overflow.
 """
 
 from __future__ import annotations
 
-from functools import partial
 from typing import NamedTuple
 
 import jax
@@ -39,7 +51,7 @@ class JoinPairs(NamedTuple):
     x_valid: jax.Array  # bool[..., capx]
     y_ids: jax.Array  # int32[..., capx, capy]
     y_valid: jax.Array  # bool[..., capx, capy]
-    overflow: jax.Array  # bool[]
+    overflow: jax.Array  # bool[] (D) or bool[P] (E/F: per-predicate)
 
 
 # ---------------------------------------------------------------------------
@@ -47,7 +59,8 @@ class JoinPairs(NamedTuple):
 # ---------------------------------------------------------------------------
 
 
-def _side_list(meta, f, p, const, vpos: str, cap: int) -> IdSet:
+def _side_list(meta, f, p, const, vpos: str, cap: int,
+               backend: str | None = None) -> IdSet:
     """Sorted candidate values of the join variable for one pattern.
 
     (?X, P, O): reverse neighbors (column scan).  (S, P, ?X): direct (row).
@@ -56,23 +69,24 @@ def _side_list(meta, f, p, const, vpos: str, cap: int) -> IdSet:
     p = jnp.asarray(p, jnp.int32) - 1
     c = jnp.asarray(const, jnp.int32) - 1
     if vpos == "s":
-        r = k2forest.col_scan(meta, f, p, c, cap)
+        r = k2forest.col_scan(meta, f, p, c, cap, backend)
     else:
-        r = k2forest.row_scan(meta, f, p, c, cap)
+        r = k2forest.row_scan(meta, f, p, c, cap, backend)
     return sortedset.from_result(
         jnp.where(r.valid, r.ids + 1, SENTINEL), r.valid, r.count, r.overflow
     )
 
 
-def _side_list_all_preds(meta, f, const, vpos: str, cap: int):
-    """-> (ids[P,cap], valid[P,cap], overflow) sorted within each predicate."""
+def _side_list_all_preds(meta, f, const, vpos: str, cap: int,
+                         backend: str | None = None):
+    """-> (ids[P,cap], valid[P,cap], overflow[P]) sorted within each pred."""
     c = jnp.asarray(const, jnp.int32) - 1
     if vpos == "s":
-        r = k2forest.col_scan_all_preds(meta, f, c, cap)
+        r = k2forest.col_scan_all_preds(meta, f, c, cap, backend)
     else:
-        r = k2forest.row_scan_all_preds(meta, f, c, cap)
+        r = k2forest.row_scan_all_preds(meta, f, c, cap, backend)
     ids = jnp.where(r.valid, r.ids + 1, SENTINEL)
-    return ids, r.valid, r.overflow.any()
+    return ids, r.valid, r.overflow
 
 
 # ---------------------------------------------------------------------------
@@ -80,10 +94,11 @@ def _side_list_all_preds(meta, f, const, vpos: str, cap: int):
 # ---------------------------------------------------------------------------
 
 
-def join_a(meta, f, p1, c1, vpos1: str, p2, c2, vpos2: str, cap: int) -> IdSet:
+def join_a(meta, f, p1, c1, vpos1: str, p2, c2, vpos2: str, cap: int,
+           backend: str | None = None) -> IdSet:
     """(?X,P1,O1)(?X,P2,O2)-style: two bounded patterns, intersect."""
-    a = _side_list(meta, f, p1, c1, vpos1, cap)
-    b = _side_list(meta, f, p2, c2, vpos2, cap)
+    a = _side_list(meta, f, p1, c1, vpos1, cap, backend)
+    b = _side_list(meta, f, p2, c2, vpos2, cap, backend)
     return sortedset.intersect(a, b)
 
 
@@ -91,13 +106,15 @@ class PerPredSets(NamedTuple):
     ids: jax.Array  # int32[P, cap]
     valid: jax.Array  # bool[P, cap]
     preds: jax.Array  # int32[P] 1-based predicate ids
-    overflow: jax.Array
+    counts: jax.Array  # int32[P] per-predicate result counts
+    overflow: jax.Array  # bool[P] per-predicate truncation flags
 
 
-def join_b(meta, f, p1, c1, vpos1: str, c2, vpos2: str, cap: int) -> PerPredSets:
+def join_b(meta, f, p1, c1, vpos1: str, c2, vpos2: str, cap: int,
+           backend: str | None = None) -> PerPredSets:
     """Pattern 2 has unbounded predicate: bounded side first, then ∩ per pred."""
-    a = _side_list(meta, f, p1, c1, vpos1, cap)
-    ids2, valid2, ovf2 = _side_list_all_preds(meta, f, c2, vpos2, cap)
+    a = _side_list(meta, f, p1, c1, vpos1, cap, backend)
+    ids2, valid2, ovf2 = _side_list_all_preds(meta, f, c2, vpos2, cap, backend)
 
     def one(ids_p, valid_p):
         b = IdSet(ids_p, valid_p, valid_p.sum().astype(jnp.int32), jnp.asarray(False))
@@ -107,16 +124,18 @@ def join_b(meta, f, p1, c1, vpos1: str, c2, vpos2: str, cap: int) -> PerPredSets
     ids, valid = jax.vmap(one)(ids2, valid2)
     P = f.n_preds
     return PerPredSets(
-        ids, valid, jnp.arange(1, P + 1, dtype=jnp.int32), a.overflow | ovf2
+        ids, valid, jnp.arange(1, P + 1, dtype=jnp.int32),
+        valid.sum(axis=-1).astype(jnp.int32), a.overflow | ovf2,
     )
 
 
-def join_c(meta, f, c1, vpos1: str, c2, vpos2: str, cap: int) -> IdSet:
+def join_c(meta, f, c1, vpos1: str, c2, vpos2: str, cap: int,
+           backend: str | None = None) -> IdSet:
     """Both predicates unbounded: union per side, intersect the unions."""
-    ids1, valid1, ovf1 = _side_list_all_preds(meta, f, c1, vpos1, cap)
-    ids2, valid2, ovf2 = _side_list_all_preds(meta, f, c2, vpos2, cap)
-    u1 = sortedset.union_rows(ids1, valid1, cap, ovf1)
-    u2 = sortedset.union_rows(ids2, valid2, cap, ovf2)
+    ids1, valid1, ovf1 = _side_list_all_preds(meta, f, c1, vpos1, cap, backend)
+    ids2, valid2, ovf2 = _side_list_all_preds(meta, f, c2, vpos2, cap, backend)
+    u1 = sortedset.union_rows(ids1, valid1, cap, ovf1.any())
+    u2 = sortedset.union_rows(ids2, valid2, cap, ovf2.any())
     return sortedset.intersect(u1, u2)
 
 
@@ -125,62 +144,78 @@ def join_c(meta, f, c1, vpos1: str, c2, vpos2: str, cap: int) -> IdSet:
 # ---------------------------------------------------------------------------
 
 
-def _rebind_batch(meta, f, preds, xs, vpos2: str, cap_y: int):
-    """Resolve pattern-2 for every (pred, X) pair; X bound into vpos2."""
-    if vpos2 == "s":  # (X, P2, ?Y): row scans
-        r = k2forest.row_scan_batch(meta, f, preds - 1, xs - 1, cap_y)
-    else:  # (?Y, P2, X): column scans
-        r = k2forest.col_scan_batch(meta, f, preds - 1, xs - 1, cap_y)
-    return jnp.where(r.valid, r.ids + 1, SENTINEL), r.valid, r.overflow.any()
+def _wrap_rebind(x_valid, y_ids, y_valid, y_ovf):
+    """Shift rebind output to 1-based ids, mask by X validity."""
+    ids = jnp.where(y_valid, y_ids + 1, SENTINEL)
+    valid = y_valid & x_valid[..., None]
+    ovf = (y_ovf & x_valid).any(axis=-1)
+    return ids, valid, ovf
 
 
-def join_d(
-    meta, f, p1, c1, vpos1: str, p2, vpos2: str, cap_x: int, cap_y: int
-) -> JoinPairs:
+def join_d(meta, f, p1, c1, vpos1: str, p2, vpos2: str,
+           cap_x: int, cap_y: int, backend: str | None = None) -> JoinPairs:
     """(?X,P1,O1)(?Y,P2,?X)-style: resolve X list, re-bind into pattern 2.
 
     vpos2 names the position of **?X** in pattern 2; ?Y takes the other one.
+    One fused scan→rebind launch: the X side-list never leaves the device.
     """
-    a = _side_list(meta, f, p1, c1, vpos1, cap_x)
-    xs = jnp.where(a.valid, a.ids, 1)  # clamp invalid lanes to a safe id
-    preds = jnp.full((cap_x,), jnp.asarray(p2, jnp.int32))
-    y_ids, y_valid, ovf = _rebind_batch(meta, f, preds, xs, vpos2, cap_y)
-    y_valid = y_valid & a.valid[:, None]
-    return JoinPairs(a.ids, a.valid, y_ids, y_valid, a.overflow | ovf)
+    ax1 = jnp.asarray([1 if vpos1 == "s" else 0], jnp.int32)
+    ax2 = jnp.asarray([0 if vpos2 == "s" else 1], jnp.int32)
+    p1v = jnp.reshape(jnp.asarray(p1, jnp.int32) - 1, (1,))
+    c1v = jnp.reshape(jnp.asarray(c1, jnp.int32) - 1, (1,))
+    p2v = jnp.reshape(jnp.asarray(p2, jnp.int32) - 1, (1,))
+    (x_ids, x_valid, _, x_ovf, y_ids, y_valid, _, y_ovf) = (
+        jax.tree.map(lambda a: a[0], k2forest.scan_rebind_batch(
+            meta, f, p1v, c1v, ax1, p2v, ax2, cap_x, cap_y, backend
+        ))
+    )
+    xi = jnp.where(x_valid, x_ids + 1, SENTINEL)
+    yi, yv, yo = _wrap_rebind(x_valid, y_ids, y_valid, y_ovf)
+    return JoinPairs(xi, x_valid, yi, yv, x_ovf | yo)
 
 
-def join_e(
-    meta, f, p1, c1, vpos1: str, vpos2: str, cap_x: int, cap_y: int
-) -> JoinPairs:
-    """D with pattern-2 predicate unbounded: repeat for every predicate."""
-    a = _side_list(meta, f, p1, c1, vpos1, cap_x)
-    xs = jnp.where(a.valid, a.ids, 1)
+def join_e(meta, f, p1, c1, vpos1: str, vpos2: str,
+           cap_x: int, cap_y: int, backend: str | None = None) -> JoinPairs:
+    """D with pattern-2 predicate unbounded: repeat for every predicate.
+
+    One fused launch with P query lanes — lane p re-resolves the (cheap) X
+    side-list and re-binds it into predicate p's tree.
+    """
     P = f.n_preds
+    ax1 = jnp.full((P,), 1 if vpos1 == "s" else 0, jnp.int32)
+    ax2 = jnp.full((P,), 0 if vpos2 == "s" else 1, jnp.int32)
+    p1v = jnp.full((P,), jnp.asarray(p1, jnp.int32) - 1)
+    c1v = jnp.full((P,), jnp.asarray(c1, jnp.int32) - 1)
+    p2v = jnp.arange(P, dtype=jnp.int32)
+    (x_ids, x_valid, _, x_ovf, y_ids, y_valid, _, y_ovf) = (
+        k2forest.scan_rebind_batch(
+            meta, f, p1v, c1v, ax1, p2v, ax2, cap_x, cap_y, backend
+        )
+    )
+    xi = jnp.where(x_valid, x_ids + 1, SENTINEL)
+    yi, yv, yo = _wrap_rebind(x_valid, y_ids, y_valid, y_ovf)
+    return JoinPairs(xi, x_valid, yi, yv, x_ovf | yo)
 
-    def per_pred(p):
-        preds = jnp.full((cap_x,), p, jnp.int32)
-        y_ids, y_valid, ovf = _rebind_batch(meta, f, preds, xs, vpos2, cap_y)
-        return y_ids, y_valid & a.valid[:, None], ovf
 
-    y_ids, y_valid, ovf = jax.vmap(per_pred)(jnp.arange(1, P + 1, dtype=jnp.int32))
-    x_ids = jnp.broadcast_to(a.ids, (P, cap_x))
-    x_valid = jnp.broadcast_to(a.valid, (P, cap_x))
-    return JoinPairs(x_ids, x_valid, y_ids, y_valid, a.overflow | ovf.any())
+def join_f(meta, f, c1, vpos1: str, vpos2: str,
+           cap_x: int, cap_y: int, backend: str | None = None) -> JoinPairs:
+    """Both predicates unbounded: union X over predicates, then E's re-bind.
 
-
-def join_f(meta, f, c1, vpos1: str, vpos2: str, cap_x: int, cap_y: int) -> JoinPairs:
-    """Both predicates unbounded: union X over predicates, then E's re-bind."""
-    ids1, valid1, ovf1 = _side_list_all_preds(meta, f, c1, vpos1, cap_x)
-    u = sortedset.union_rows(ids1, valid1, cap_x, ovf1)
-    xs = jnp.where(u.valid, u.ids, 1)
+    The unioned X list is data-dependent, so the re-bind runs as one flat
+    (P·cap_x)-query batched scan instead of the fused kernel.
+    """
+    ids1, valid1, ovf1 = _side_list_all_preds(meta, f, c1, vpos1, cap_x, backend)
+    u = sortedset.union_rows(ids1, valid1, cap_x, ovf1.any())
+    xs = jnp.where(u.valid, u.ids, 1)  # clamp invalid lanes to a safe id
     P = f.n_preds
-
-    def per_pred(p):
-        preds = jnp.full((cap_x,), p, jnp.int32)
-        y_ids, y_valid, ovf = _rebind_batch(meta, f, preds, xs, vpos2, cap_y)
-        return y_ids, y_valid & u.valid[:, None], ovf
-
-    y_ids, y_valid, ovf = jax.vmap(per_pred)(jnp.arange(1, P + 1, dtype=jnp.int32))
+    preds = jnp.repeat(jnp.arange(P, dtype=jnp.int32), cap_x)
+    keys = jnp.tile(xs - 1, P)
+    axes = jnp.full((P * cap_x,), 0 if vpos2 == "s" else 1, jnp.int32)
+    r = k2forest.scan_batch_mixed(meta, f, preds, keys, axes, cap_y, backend)
+    y_ids = r.ids.reshape(P, cap_x, cap_y)
+    y_valid = r.valid.reshape(P, cap_x, cap_y)
+    y_ovf = r.overflow.reshape(P, cap_x)
+    yi, yv, yo = _wrap_rebind(u.valid[None, :], y_ids, y_valid, y_ovf)
     x_ids = jnp.broadcast_to(u.ids, (P, cap_x))
     x_valid = jnp.broadcast_to(u.valid, (P, cap_x))
-    return JoinPairs(x_ids, x_valid, y_ids, y_valid, u.overflow | ovf.any())
+    return JoinPairs(x_ids, x_valid, yi, yv, u.overflow | yo)

@@ -130,85 +130,64 @@ def check_all_preds(meta: K2Meta, f: K2Forest, row: jax.Array, col: jax.Array) -
     return check(meta, f, preds, jnp.broadcast_to(row, (P,)), jnp.broadcast_to(col, (P,)))
 
 
-def _axis_scan(
-    meta: K2Meta, f: K2Forest, pred: jax.Array, fixed: jax.Array, cap: int, axis: int
-) -> QueryResult:
-    """Single-query row/col scan on predicate ``pred`` (vmap for batches)."""
-    H = meta.n_levels
-    pred = pred.astype(jnp.int32)
-    fdig = k2tree._row_digits(meta, fixed.astype(jnp.int32))
-
-    k0 = meta.ks[0]
-    sub0 = meta.subsides[0]
-    init_n = min(k0, cap)
-    j0 = jnp.arange(init_n, dtype=jnp.int32)
-    p0 = fdig[0] * k0 + j0 if axis == 0 else j0 * k0 + fdig[0]
-    pos = jnp.zeros((cap,), jnp.int32).at[:init_n].set(p0)
-    base = jnp.zeros((cap,), jnp.int32).at[:init_n].set(j0 * sub0)
-    valid = jnp.zeros((cap,), jnp.bool_).at[:init_n].set(True)
-    overflow = jnp.asarray(k0 > cap)
-
-    words0 = f.l_words if H == 1 else f.t_words
-    valid = valid & (bitvec.get_bit_2d(words0, pred, pos) == 1)
-
-    for lvl in range(H - 1):
-        last_child = lvl + 1 == H - 1
-        k = meta.ks[lvl + 1]
-        r = meta.radices[lvl + 1]
-        sub = meta.subsides[lvl + 1]
-        j = bitvec.rank1_2d(f.t_words, f.t_rank, pred, pos) - f.ones_before[pred, lvl]
-        child_base0 = f.level_start[pred, lvl + 1] + j * r
-        ch = jnp.arange(k, dtype=jnp.int32)
-        if axis == 0:
-            cpos = child_base0[:, None] + fdig[lvl + 1] * k + ch[None, :]
-        else:
-            cpos = child_base0[:, None] + ch[None, :] * k + fdig[lvl + 1]
-        cbase = base[:, None] + ch[None, :] * sub
-        wordsc = f.l_words if last_child else f.t_words
-        cbit = bitvec.get_bit_2d(wordsc, pred, jnp.where(valid[:, None], cpos, 0))
-        cvalid = valid[:, None] & (cbit == 1)
-        valid, _, ovf, (pos, base) = _compact(
-            cvalid.reshape(-1), cap, cpos.reshape(-1), cbase.reshape(-1)
-        )
-        overflow = overflow | ovf
-        pos = jnp.where(valid, pos, 0)
-
-    valid, count, ovf, (ids,) = _compact(valid, cap, base)
-    return QueryResult(ids=ids, valid=valid, count=count, overflow=overflow | ovf)
-
-
-def row_scan(meta: K2Meta, f: K2Forest, pred, row, cap: int) -> QueryResult:
+def row_scan(meta: K2Meta, f: K2Forest, pred, row, cap: int,
+             backend: str | None = None) -> QueryResult:
     """(S, P, ?O) — direct neighbors, ascending object id."""
-    return _axis_scan(meta, f, jnp.asarray(pred), jnp.asarray(row), cap, axis=0)
+    r = scan_batch_mixed(
+        meta, f, jnp.reshape(jnp.asarray(pred, jnp.int32), (1,)),
+        jnp.reshape(jnp.asarray(row, jnp.int32), (1,)),
+        jnp.zeros((1,), jnp.int32), cap, backend,
+    )
+    return jax.tree.map(lambda x: x[0], r)
 
 
-def col_scan(meta: K2Meta, f: K2Forest, pred, col, cap: int) -> QueryResult:
+def col_scan(meta: K2Meta, f: K2Forest, pred, col, cap: int,
+             backend: str | None = None) -> QueryResult:
     """(?S, P, O) — reverse neighbors, ascending subject id."""
-    return _axis_scan(meta, f, jnp.asarray(pred), jnp.asarray(col), cap, axis=1)
+    r = scan_batch_mixed(
+        meta, f, jnp.reshape(jnp.asarray(pred, jnp.int32), (1,)),
+        jnp.reshape(jnp.asarray(col, jnp.int32), (1,)),
+        jnp.ones((1,), jnp.int32), cap, backend,
+    )
+    return jax.tree.map(lambda x: x[0], r)
 
 
-def row_scan_batch(meta: K2Meta, f: K2Forest, preds, rows, cap: int) -> QueryResult:
-    return jax.vmap(lambda p, r: _axis_scan(meta, f, p, r, cap, 0))(
-        jnp.asarray(preds), jnp.asarray(rows)
+def row_scan_batch(meta: K2Meta, f: K2Forest, preds, rows, cap: int,
+                   backend: str | None = None) -> QueryResult:
+    preds = jnp.asarray(preds, jnp.int32)
+    return scan_batch_mixed(
+        meta, f, preds, jnp.asarray(rows, jnp.int32),
+        jnp.zeros(preds.shape, jnp.int32), cap, backend,
     )
 
 
-def col_scan_batch(meta: K2Meta, f: K2Forest, preds, cols, cap: int) -> QueryResult:
-    return jax.vmap(lambda p, c: _axis_scan(meta, f, p, c, cap, 1))(
-        jnp.asarray(preds), jnp.asarray(cols)
+def col_scan_batch(meta: K2Meta, f: K2Forest, preds, cols, cap: int,
+                   backend: str | None = None) -> QueryResult:
+    preds = jnp.asarray(preds, jnp.int32)
+    return scan_batch_mixed(
+        meta, f, preds, jnp.asarray(cols, jnp.int32),
+        jnp.ones(preds.shape, jnp.int32), cap, backend,
     )
 
 
-def row_scan_all_preds(meta: K2Meta, f: K2Forest, row, cap: int) -> QueryResult:
-    """(S, ?P, ?O): per-predicate object lists, result axis 0 = predicate."""
+def row_scan_all_preds(meta: K2Meta, f: K2Forest, row, cap: int,
+                       backend: str | None = None) -> QueryResult:
+    """(S, ?P, ?O): per-predicate object lists, result axis 0 = predicate.
+
+    The all-preds sweep is the batched mixed scan with a broadcast key —
+    one kernel launch covers every predicate's tree.
+    """
     preds = jnp.arange(f.n_preds, dtype=jnp.int32)
-    return row_scan_batch(meta, f, preds, jnp.broadcast_to(jnp.asarray(row), (f.n_preds,)), cap)
+    rows = jnp.broadcast_to(jnp.asarray(row, jnp.int32), (f.n_preds,))
+    return row_scan_batch(meta, f, preds, rows, cap, backend)
 
 
-def col_scan_all_preds(meta: K2Meta, f: K2Forest, col, cap: int) -> QueryResult:
+def col_scan_all_preds(meta: K2Meta, f: K2Forest, col, cap: int,
+                       backend: str | None = None) -> QueryResult:
     """(?S, ?P, O): per-predicate subject lists."""
     preds = jnp.arange(f.n_preds, dtype=jnp.int32)
-    return col_scan_batch(meta, f, preds, jnp.broadcast_to(jnp.asarray(col), (f.n_preds,)), cap)
+    cols = jnp.broadcast_to(jnp.asarray(col, jnp.int32), (f.n_preds,))
+    return col_scan_batch(meta, f, preds, cols, cap, backend)
 
 
 def _axis_scan_traced(
@@ -286,22 +265,28 @@ def scan_batch_mixed(
     )
 
 
-def range_scan(meta: K2Meta, f: K2Forest, pred, cap: int) -> PairResult:
-    """(?S, P, ?O): all pairs of one predicate's matrix."""
+def _range_scan_traced(meta: K2Meta, f: K2Forest, pred: jax.Array, cap: int) -> PairResult:
+    """Single-predicate (?S, P, ?O) traversal (vmap for batches) — the jnp
+    reference behind ``range_scan_batch``.
+
+    Level 0 bit-tests every root child and only then compacts the frontier:
+    overflow latches only when more than ``cap`` root children are actually
+    occupied.  (The previous code truncated the ``r0`` root radix to ``cap``
+    *before* the bit test, falsely reporting overflow — and silently
+    dropping candidates — for any sparse matrix under a large root radix.)
+    """
     H = meta.n_levels
     pred = jnp.asarray(pred, dtype=jnp.int32)
     k0, r0, sub0 = meta.ks[0], meta.radices[0], meta.subsides[0]
 
-    init_n = min(r0, cap)
-    d0 = jnp.arange(init_n, dtype=jnp.int32)
-    pos = jnp.zeros((cap,), jnp.int32).at[:init_n].set(d0)
-    rbase = jnp.zeros((cap,), jnp.int32).at[:init_n].set((d0 // k0) * sub0)
-    cbase = jnp.zeros((cap,), jnp.int32).at[:init_n].set((d0 % k0) * sub0)
-    valid = jnp.zeros((cap,), jnp.bool_).at[:init_n].set(True)
-    overflow = jnp.asarray(r0 > cap)
-
+    d0 = jnp.arange(r0, dtype=jnp.int32)
     words0 = f.l_words if H == 1 else f.t_words
-    valid = valid & (bitvec.get_bit_2d(words0, pred, pos) == 1)
+    bit0 = bitvec.get_bit_2d(words0, pred, d0)
+    valid, _, ovf, (pos, rbase, cbase) = _compact(
+        bit0 == 1, cap, d0, (d0 // k0) * sub0, (d0 % k0) * sub0
+    )
+    overflow = ovf
+    pos = jnp.where(valid, pos, 0)
 
     for lvl in range(H - 1):
         last_child = lvl + 1 == H - 1
@@ -327,7 +312,82 @@ def range_scan(meta: K2Meta, f: K2Forest, pred, cap: int) -> PairResult:
     return PairResult(rows, cols, valid, count, overflow | ovf)
 
 
-def range_scan_all_preds(meta: K2Meta, f: K2Forest, cap: int) -> PairResult:
+def range_scan_batch(
+    meta: K2Meta, f: K2Forest, preds, cap: int, backend: str | None = None
+) -> PairResult:
+    """Batched (?S, P, ?O) pair enumeration, one lane per predicate.
+
+    ``backend`` selects the compute substrate exactly like
+    ``scan_batch_mixed``: "pallas" routes to the batched ``kernels.k2_range``
+    TPU kernel, "jnp" to the vmapped traversal above; None defers to the
+    ``REPRO_SCAN_BACKEND`` env flag.  Bit-identical outputs
+    (tests/test_k2_range.py).
+    """
+    from repro.kernels import ops  # deferred: core must import without pallas
+
+    preds = jnp.asarray(preds, jnp.int32)
+    if ops.scan_backend(backend) == "pallas":
+        rows, cols, valid, count, overflow = ops.k2_range_forest(
+            meta, f, preds, cap=cap
+        )
+        return PairResult(rows, cols, valid, count, overflow)
+    return jax.vmap(lambda p: _range_scan_traced(meta, f, p, cap))(preds)
+
+
+def range_scan(meta: K2Meta, f: K2Forest, pred, cap: int,
+               backend: str | None = None) -> PairResult:
+    """(?S, P, ?O): all pairs of one predicate's matrix (Morton order)."""
+    r = range_scan_batch(
+        meta, f, jnp.reshape(jnp.asarray(pred, jnp.int32), (1,)), cap, backend
+    )
+    return jax.tree.map(lambda x: x[0], r)
+
+
+def range_scan_all_preds(meta: K2Meta, f: K2Forest, cap: int,
+                         backend: str | None = None) -> PairResult:
     """(?S, ?P, ?O): dataset dump, axis 0 = predicate."""
     preds = jnp.arange(f.n_preds, dtype=jnp.int32)
-    return jax.vmap(lambda p: range_scan(meta, f, p, cap))(preds)
+    return range_scan_batch(meta, f, preds, cap, backend)
+
+
+def scan_rebind_batch(
+    meta: K2Meta, f: K2Forest, preds1, keys1, axes1, preds2, axes2,
+    cap_x: int, cap_y: int, backend: str | None = None,
+):
+    """Fused X-resolution + re-bind (join categories D–F).
+
+    Per query lane: scan (preds1, keys1, axes1) into a ``cap_x`` side-list
+    of ?X ids, then re-bind each X into pattern 2 as (preds2, X, axes2)
+    scans of ``cap_y``.  Invalid X lanes scan key 0; callers mask their
+    ``y_valid`` rows with ``x_valid``.
+
+    Returns ``(x_ids, x_valid, x_count, x_overflow, y_ids, y_valid,
+    y_count, y_overflow)`` shaped ``(Q,cap_x) ×2, (Q,) ×2,
+    (Q,cap_x,cap_y) ×2, (Q,cap_x) ×2`` — 0-based coordinates throughout.
+    "pallas" runs the fused ``kernels.k2_scan.k2_scan_rebind`` kernel (no
+    host round-trip between the two traversals); "jnp" composes the two
+    vmapped traversals.  Bit-identical outputs (tests/test_joins_kernel.py).
+    """
+    from repro.kernels import ops  # deferred: core must import without pallas
+
+    preds1 = jnp.asarray(preds1, jnp.int32)
+    keys1 = jnp.asarray(keys1, jnp.int32)
+    axes1 = jnp.asarray(axes1, jnp.int32)
+    preds2 = jnp.asarray(preds2, jnp.int32)
+    axes2 = jnp.asarray(axes2, jnp.int32)
+    if ops.scan_backend(backend) == "pallas":
+        return ops.k2_scan_rebind_forest(
+            meta, f, preds1, keys1, axes1, preds2, axes2,
+            cap_x=cap_x, cap_y=cap_y,
+        )
+    (q,) = preds1.shape
+    rx = scan_batch_mixed(meta, f, preds1, keys1, axes1, cap_x, "jnp")
+    keys2 = jnp.where(rx.valid, rx.ids, 0).reshape(q * cap_x)
+    p2 = jnp.broadcast_to(preds2[:, None], (q, cap_x)).reshape(q * cap_x)
+    a2 = jnp.broadcast_to(axes2[:, None], (q, cap_x)).reshape(q * cap_x)
+    ry = scan_batch_mixed(meta, f, p2, keys2, a2, cap_y, "jnp")
+    return (
+        rx.ids, rx.valid, rx.count, rx.overflow,
+        ry.ids.reshape(q, cap_x, cap_y), ry.valid.reshape(q, cap_x, cap_y),
+        ry.count.reshape(q, cap_x), ry.overflow.reshape(q, cap_x),
+    )

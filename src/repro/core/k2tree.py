@@ -322,27 +322,25 @@ def col_scan(meta: K2Meta, tree: K2Tree, col: jax.Array, cap: int) -> QueryResul
 
 
 def range_scan(meta: K2Meta, tree: K2Tree, cap: int) -> PairResult:
-    """(?S, P, ?O): every 1-cell of the matrix (Morton order), capped."""
+    """(?S, P, ?O): every 1-cell of the matrix (Morton order), capped.
+
+    Level 0 bit-tests every root child and only then compacts into the
+    ``cap`` frontier — overflow latches only when more than ``cap`` root
+    children are occupied (not whenever the root radix exceeds ``cap``).
+    """
     H = meta.n_levels
     k0 = meta.ks[0]
     r0 = meta.radices[0]
     sub0 = meta.subsides[0]
 
-    pos = jnp.zeros((cap,), jnp.int32)
-    rbase = jnp.zeros((cap,), jnp.int32)
-    cbase = jnp.zeros((cap,), jnp.int32)
-    valid = jnp.zeros((cap,), jnp.bool_)
-
-    init_n = min(r0, cap)
-    d0 = jnp.arange(init_n, dtype=jnp.int32)
-    pos = pos.at[:init_n].set(d0)
-    rbase = rbase.at[:init_n].set((d0 // k0) * sub0)
-    cbase = cbase.at[:init_n].set((d0 % k0) * sub0)
-    valid = valid.at[:init_n].set(True)
-    overflow = jnp.asarray(r0 > cap)
-
+    d0 = jnp.arange(r0, dtype=jnp.int32)
     bv0 = tree.l if H == 1 else tree.t
-    valid = valid & (bitvec.get_bit(bv0.words, pos) == 1)
+    bit0 = bitvec.get_bit(bv0.words, d0)
+    valid, _, ovf, (pos, rbase, cbase) = _compact(
+        bit0 == 1, cap, d0, (d0 // k0) * sub0, (d0 % k0) * sub0
+    )
+    overflow = ovf
+    pos = jnp.where(valid, pos, 0)
 
     for lvl in range(H - 1):
         last_child = lvl + 1 == H - 1

@@ -50,39 +50,45 @@ def s_any_o(meta: K2Meta, f: K2Forest, s, o) -> jax.Array:
     return k2forest.check_all_preds(meta, f, s - 1, o - 1)
 
 
-def sp_any(meta: K2Meta, f: K2Forest, s, p, cap: int) -> QueryResult:
+def sp_any(meta: K2Meta, f: K2Forest, s, p, cap: int,
+           backend: str | None = None) -> QueryResult:
     """(S, P, ?O) -> object IDs, ascending (merge-join ready)."""
     s, p = jnp.asarray(s, jnp.int32), jnp.asarray(p, jnp.int32)
-    return _ids(k2forest.row_scan(meta, f, p - 1, s - 1, cap))
+    return _ids(k2forest.row_scan(meta, f, p - 1, s - 1, cap, backend))
 
 
-def s_any_any(meta: K2Meta, f: K2Forest, s, cap: int) -> QueryResult:
+def s_any_any(meta: K2Meta, f: K2Forest, s, cap: int,
+              backend: str | None = None) -> QueryResult:
     """(S, ?P, ?O) -> per-predicate object lists (axis 0 = predicate)."""
     s = jnp.asarray(s, jnp.int32)
-    return _ids(k2forest.row_scan_all_preds(meta, f, s - 1, cap))
+    return _ids(k2forest.row_scan_all_preds(meta, f, s - 1, cap, backend))
 
 
-def any_po(meta: K2Meta, f: K2Forest, p, o, cap: int) -> QueryResult:
+def any_po(meta: K2Meta, f: K2Forest, p, o, cap: int,
+           backend: str | None = None) -> QueryResult:
     """(?S, P, O) -> subject IDs, ascending."""
     p, o = jnp.asarray(p, jnp.int32), jnp.asarray(o, jnp.int32)
-    return _ids(k2forest.col_scan(meta, f, p - 1, o - 1, cap))
+    return _ids(k2forest.col_scan(meta, f, p - 1, o - 1, cap, backend))
 
 
-def any_any_o(meta: K2Meta, f: K2Forest, o, cap: int) -> QueryResult:
+def any_any_o(meta: K2Meta, f: K2Forest, o, cap: int,
+              backend: str | None = None) -> QueryResult:
     """(?S, ?P, O) -> per-predicate subject lists."""
     o = jnp.asarray(o, jnp.int32)
-    return _ids(k2forest.col_scan_all_preds(meta, f, o - 1, cap))
+    return _ids(k2forest.col_scan_all_preds(meta, f, o - 1, cap, backend))
 
 
-def any_p_any(meta: K2Meta, f: K2Forest, p, cap: int) -> PairResult:
+def any_p_any(meta: K2Meta, f: K2Forest, p, cap: int,
+              backend: str | None = None) -> PairResult:
     """(?S, P, ?O) -> all (subject, object) pairs of predicate P."""
     p = jnp.asarray(p, jnp.int32)
-    return _pairs(k2forest.range_scan(meta, f, p - 1, cap))
+    return _pairs(k2forest.range_scan(meta, f, p - 1, cap, backend))
 
 
-def dump(meta: K2Meta, f: K2Forest, cap: int) -> PairResult:
+def dump(meta: K2Meta, f: K2Forest, cap: int,
+         backend: str | None = None) -> PairResult:
     """(?S, ?P, ?O) -> every triple (axis 0 = predicate)."""
-    return _pairs(k2forest.range_scan_all_preds(meta, f, cap))
+    return _pairs(k2forest.range_scan_all_preds(meta, f, cap, backend))
 
 
 # batched forms used by the serving path -----------------------------------
@@ -92,11 +98,11 @@ def spo_batch(meta, f, s, p, o):
     return spo(meta, f, s, p, o)
 
 
-def sp_any_batch(meta, f, s, p, cap: int) -> QueryResult:
+def sp_any_batch(meta, f, s, p, cap: int, backend: str | None = None) -> QueryResult:
     s, p = jnp.asarray(s, jnp.int32), jnp.asarray(p, jnp.int32)
-    return _ids(k2forest.row_scan_batch(meta, f, p - 1, s - 1, cap))
+    return _ids(k2forest.row_scan_batch(meta, f, p - 1, s - 1, cap, backend))
 
 
-def any_po_batch(meta, f, p, o, cap: int) -> QueryResult:
+def any_po_batch(meta, f, p, o, cap: int, backend: str | None = None) -> QueryResult:
     p, o = jnp.asarray(p, jnp.int32), jnp.asarray(o, jnp.int32)
-    return _ids(k2forest.col_scan_batch(meta, f, p - 1, o - 1, cap))
+    return _ids(k2forest.col_scan_batch(meta, f, p - 1, o - 1, cap, backend))

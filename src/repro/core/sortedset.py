@@ -68,7 +68,7 @@ def union_rows(ids2d: jax.Array, valid2d: jax.Array, cap: int, overflow) -> IdSe
         flat, mode="drop"
     )[:-1]
     out = out[:cap] if flat.shape[0] >= cap else jnp.pad(
-        out, (0, cap - flat.shape[0]), constant_values=2**31 - 1
+        out, (0, cap - flat.shape[0]), constant_values=SENTINEL
     )
     valid = out != SENTINEL
     ovf = jnp.asarray(overflow) | (n_unique > cap)

@@ -1,0 +1,170 @@
+"""Pallas TPU kernel: batched k²-tree range scans (the (?S,P,?O) path).
+
+Pair enumeration over whole matrices: one query lane = one predicate's tree,
+and the traversal walks EVERY 1-node instead of a single row/column slab.
+Each lane carries a frontier of up to ``cap`` nodes as ``(pos, rbase,
+cbase)`` — tree bit position plus the node's row/column submatrix origin —
+and per level expands by the full radix ``k²_{l+1}`` (vs the scan kernel's
+``k`` free-axis children), so results come out in Morton (level-order)
+sequence: the order the paper's DFS would emit.
+
+Level 0 materializes ALL ``k0²`` root children, tests their bits, and only
+then compacts into the ``cap`` frontier — overflow latches only when more
+than ``cap`` root children are actually occupied.  (The original jnp
+traversal truncated the root radix to ``cap`` *before* the bit test, so a
+sparse matrix under a large root radix both falsely reported overflow and
+silently dropped candidates; ``core/k2forest.range_scan`` is fixed to the
+same compact-after-test semantics and is the differential reference.)
+
+Outputs per lane: ``rows[cap] / cols[cap]`` (Morton-ordered pair
+coordinates), ``valid[cap]``, ``count``, ``overflow``.  Bit-exact against
+``ref.k2_range_ref`` and ``k2forest.range_scan_batch(backend="jnp")``;
+validated with ``interpret=True`` against the numpy Morton-order oracle in
+``tests/test_k2_range.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.k2tree import K2Meta
+
+from repro.kernels.k2_scan import _bit_at, _compact_rows, _rank_at
+
+
+def _pad_cols(width: int, cap: int, valid, *arrays):
+    """Right-pad candidate columns with dead lanes so ``_compact_rows`` can
+    always gather ``cap`` survivors (level-0 radix may be below cap)."""
+    if width >= cap:
+        return valid, arrays
+    pad = [(0, 0), (0, cap - width)]
+    return (
+        jnp.pad(valid, pad),
+        tuple(jnp.pad(a, pad) for a in arrays),
+    )
+
+
+def _traverse_range(meta: K2Meta, cap: int, preds,
+                    t_words, t_rank, l_words, ones_before, level_start):
+    """Level-synchronous full-matrix enumeration over (N,) predicate lanes.
+
+    Returns ``(rows, cols, valid, count, overflow)`` with shapes
+    ``(N, cap) ×3, (N,) ×2``.
+    """
+    H = meta.n_levels
+    ks = meta.ks
+    radices = meta.radices
+    subsides = meta.subsides
+    bq = preds.shape[0]
+
+    # level 0: every root child, bit-tested BEFORE the frontier is capped
+    k0, r0, sub0 = ks[0], radices[0], subsides[0]
+    d0 = jnp.arange(r0, dtype=jnp.int32)[None, :]
+    pos0 = jnp.broadcast_to(d0, (bq, r0)).astype(jnp.int32)
+    rb0 = jnp.broadcast_to((d0 // k0) * sub0, (bq, r0)).astype(jnp.int32)
+    cb0 = jnp.broadcast_to((d0 % k0) * sub0, (bq, r0)).astype(jnp.int32)
+    words0 = l_words if H == 1 else t_words
+    bit0 = _bit_at(words0, jnp.broadcast_to(preds[:, None], (bq, r0)), pos0)
+    valid0, (pos0, rb0, cb0) = _pad_cols(r0, cap, bit0 == 1, pos0, rb0, cb0)
+    valid, _, ovf, (pos, rbase, cbase) = _compact_rows(
+        valid0, cap, pos0, rb0, cb0
+    )
+    overflow = ovf
+    pos = jnp.where(valid, pos, 0)
+
+    p2 = jnp.broadcast_to(preds[:, None], (bq, cap))
+    for lvl in range(H - 1):
+        last_child = lvl + 1 == H - 1
+        k = ks[lvl + 1]
+        r = radices[lvl + 1]
+        sub = subsides[lvl + 1]
+        j = _rank_at(t_words, t_rank, p2, pos) - ones_before[preds, lvl][:, None]
+        child_base0 = level_start[preds, lvl + 1][:, None] + j * r
+        d = jnp.arange(r, dtype=jnp.int32)[None, None, :]
+        cpos = child_base0[:, :, None] + d
+        crb = rbase[:, :, None] + (d // k) * sub
+        ccb = cbase[:, :, None] + (d % k) * sub
+        wordsc = l_words if last_child else t_words
+        cpos_safe = jnp.where(valid[:, :, None], cpos, 0).reshape(bq, cap * r)
+        cbit = _bit_at(wordsc, jnp.broadcast_to(preds[:, None], (bq, cap * r)),
+                       cpos_safe)
+        cvalid = valid[:, :, None].repeat(r, axis=2).reshape(bq, cap * r) & (cbit == 1)
+        valid, _, ovf, (pos, rbase, cbase) = _compact_rows(
+            cvalid, cap, cpos_safe,
+            crb.reshape(bq, cap * r), ccb.reshape(bq, cap * r),
+        )
+        overflow = overflow | ovf
+        pos = jnp.where(valid, pos, 0)
+
+    valid, count, ovf, (rows, cols) = _compact_rows(valid, cap, rbase, cbase)
+    return rows, cols, valid, count, overflow | ovf
+
+
+def _make_range_kernel(meta: K2Meta, cap: int):
+    def kernel(preds_ref, t_words_ref, t_rank_ref, l_words_ref,
+               ones_before_ref, level_start_ref,
+               rows_ref, cols_ref, valid_ref, count_ref, ovf_ref):
+        rows, cols, valid, count, ovf = _traverse_range(
+            meta, cap, preds_ref[...],
+            t_words_ref[...], t_rank_ref[...], l_words_ref[...],
+            ones_before_ref[...], level_start_ref[...],
+        )
+        rows_ref[...] = rows
+        cols_ref[...] = cols
+        valid_ref[...] = valid
+        count_ref[...] = count
+        ovf_ref[...] = ovf
+
+    return kernel
+
+
+@functools.partial(
+    jax.jit, static_argnames=("meta", "cap", "block_q", "interpret")
+)
+def k2_range(
+    meta: K2Meta,
+    preds: jax.Array,
+    t_words: jax.Array,
+    t_rank: jax.Array,
+    l_words: jax.Array,
+    ones_before: jax.Array,
+    level_start: jax.Array,
+    *,
+    cap: int,
+    block_q: int = 8,
+    interpret: bool = False,
+):
+    """Batched full-matrix pair enumeration over a K2Forest arena.
+
+    Returns ``(rows, cols, valid, count, overflow)`` with shapes
+    ``(Q, cap) ×3, (Q,) ×2``.  Q must divide by block_q.
+    """
+    (q,) = preds.shape
+    assert q % block_q == 0, (q, block_q)
+    grid = (q // block_q,)
+    whole = lambda a: pl.BlockSpec(a.shape, lambda i: tuple(0 for _ in a.shape))
+    qvec = pl.BlockSpec((block_q,), lambda i: (i,))
+    qmat = pl.BlockSpec((block_q, cap), lambda i: (i, 0))
+    return pl.pallas_call(
+        _make_range_kernel(meta, cap),
+        grid=grid,
+        in_specs=[
+            qvec,
+            whole(t_words), whole(t_rank), whole(l_words),
+            whole(ones_before), whole(level_start),
+        ],
+        out_specs=(qmat, qmat, qmat, qvec, qvec),
+        out_shape=(
+            jax.ShapeDtypeStruct((q, cap), jnp.int32),
+            jax.ShapeDtypeStruct((q, cap), jnp.int32),
+            jax.ShapeDtypeStruct((q, cap), jnp.bool_),
+            jax.ShapeDtypeStruct((q,), jnp.int32),
+            jax.ShapeDtypeStruct((q,), jnp.bool_),
+        ),
+        interpret=interpret,
+    )(preds.astype(jnp.int32),
+      t_words, t_rank, l_words, ones_before, level_start)

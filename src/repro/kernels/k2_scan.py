@@ -77,81 +77,88 @@ def _compact_rows(valid: jax.Array, cap: int, *arrays: jax.Array):
     return new_valid, n, overflow, outs
 
 
-def _make_scan_kernel(meta: K2Meta, cap: int):
+def _traverse(meta: K2Meta, cap: int, preds, keys, is_row,
+              t_words, t_rank, l_words, ones_before, level_start):
+    """Level-synchronous frontier BFS over (N,) mixed row/col queries.
+
+    The shared kernel body: returns ``(ids, valid, count, overflow)`` with
+    shapes ``(N, cap) / (N, cap) / (N,) / (N,)``.  Used by both the plain
+    scan kernel and the fused scan→rebind kernel (which runs it twice).
+    """
     H = meta.n_levels
     ks = meta.ks
     radices = meta.radices
     subsides = meta.subsides
+    bq = preds.shape[0]
+    p2 = jnp.broadcast_to(preds[:, None], (bq, cap))
 
+    # per-level digit of the bound coordinate (static unroll)
+    fdig = []
+    rem = keys
+    for sub in subsides:
+        fdig.append(rem // sub)
+        rem = rem % sub
+
+    # level-0 frontier: the k0 children of the root along the free axis
+    k0, sub0 = ks[0], subsides[0]
+    init_n = min(k0, cap)
+    lane = jnp.arange(cap, dtype=jnp.int32)
+    on = lane < init_n
+    j0 = jnp.minimum(lane, init_n - 1)[None, :]
+    p0 = jnp.where(is_row[:, None], fdig[0][:, None] * k0 + j0,
+                   j0 * k0 + fdig[0][:, None])
+    pos = jnp.where(on[None, :], p0, 0).astype(jnp.int32)
+    base = jnp.broadcast_to(
+        jnp.where(on[None, :], j0 * sub0, 0), (bq, cap)
+    ).astype(jnp.int32)
+    valid = jnp.broadcast_to(on[None, :], (bq, cap))
+    overflow = jnp.full((bq,), k0 > cap, jnp.bool_)
+
+    words0 = l_words if H == 1 else t_words
+    valid = valid & (_bit_at(words0, p2, pos) == 1)
+
+    for lvl in range(H - 1):
+        last_child = lvl + 1 == H - 1
+        k = ks[lvl + 1]
+        r = radices[lvl + 1]
+        sub = subsides[lvl + 1]
+        j = _rank_at(t_words, t_rank, p2, pos) - ones_before[preds, lvl][:, None]
+        child_base0 = level_start[preds, lvl + 1][:, None] + j * r
+        ch = jnp.arange(k, dtype=jnp.int32)[None, None, :]
+        cpos = child_base0[:, :, None] + jnp.where(
+            is_row[:, None, None],
+            fdig[lvl + 1][:, None, None] * k + ch,
+            ch * k + fdig[lvl + 1][:, None, None],
+        )
+        cbase = base[:, :, None] + ch * sub
+        wordsc = l_words if last_child else t_words
+        cpos_safe = jnp.where(valid[:, :, None], cpos, 0).reshape(bq, cap * k)
+        cbit = _bit_at(wordsc, jnp.broadcast_to(preds[:, None], (bq, cap * k)),
+                       cpos_safe)
+        cvalid = valid[:, :, None].repeat(k, axis=2).reshape(bq, cap * k) & (cbit == 1)
+        valid, _, ovf, (pos, base) = _compact_rows(
+            cvalid, cap, cpos_safe, cbase.reshape(bq, cap * k)
+        )
+        overflow = overflow | ovf
+        pos = jnp.where(valid, pos, 0)
+
+    valid, count, ovf, (ids,) = _compact_rows(valid, cap, base)
+    return ids, valid, count, overflow | ovf
+
+
+def _make_scan_kernel(meta: K2Meta, cap: int):
     def kernel(preds_ref, keys_ref, axes_ref, t_words_ref, t_rank_ref,
                l_words_ref, ones_before_ref, level_start_ref,
                ids_ref, valid_ref, count_ref, ovf_ref):
-        preds = preds_ref[...]                       # (BQ,)
-        keys = keys_ref[...]
-        is_row = axes_ref[...] == 0
-        t_words = t_words_ref[...]                   # (P, Wt) — whole arena
-        t_rank = t_rank_ref[...]
-        l_words = l_words_ref[...]
-        ones_before = ones_before_ref[...]           # (P, max(H-1,1))
-        level_start = level_start_ref[...]           # (P, H)
-        bq = preds.shape[0]
-        p2 = jnp.broadcast_to(preds[:, None], (bq, cap))
-
-        # per-level digit of the bound coordinate (static unroll)
-        fdig = []
-        rem = keys
-        for sub in subsides:
-            fdig.append(rem // sub)
-            rem = rem % sub
-
-        # level-0 frontier: the k0 children of the root along the free axis
-        k0, sub0 = ks[0], subsides[0]
-        init_n = min(k0, cap)
-        lane = jnp.arange(cap, dtype=jnp.int32)
-        on = lane < init_n
-        j0 = jnp.minimum(lane, init_n - 1)[None, :]
-        p0 = jnp.where(is_row[:, None], fdig[0][:, None] * k0 + j0,
-                       j0 * k0 + fdig[0][:, None])
-        pos = jnp.where(on[None, :], p0, 0).astype(jnp.int32)
-        base = jnp.broadcast_to(
-            jnp.where(on[None, :], j0 * sub0, 0), (bq, cap)
-        ).astype(jnp.int32)
-        valid = jnp.broadcast_to(on[None, :], (bq, cap))
-        overflow = jnp.full((bq,), k0 > cap, jnp.bool_)
-
-        words0 = l_words if H == 1 else t_words
-        valid = valid & (_bit_at(words0, p2, pos) == 1)
-
-        for lvl in range(H - 1):
-            last_child = lvl + 1 == H - 1
-            k = ks[lvl + 1]
-            r = radices[lvl + 1]
-            sub = subsides[lvl + 1]
-            j = _rank_at(t_words, t_rank, p2, pos) - ones_before[preds, lvl][:, None]
-            child_base0 = level_start[preds, lvl + 1][:, None] + j * r
-            ch = jnp.arange(k, dtype=jnp.int32)[None, None, :]
-            cpos = child_base0[:, :, None] + jnp.where(
-                is_row[:, None, None],
-                fdig[lvl + 1][:, None, None] * k + ch,
-                ch * k + fdig[lvl + 1][:, None, None],
-            )
-            cbase = base[:, :, None] + ch * sub
-            wordsc = l_words if last_child else t_words
-            cpos_safe = jnp.where(valid[:, :, None], cpos, 0).reshape(bq, cap * k)
-            cbit = _bit_at(wordsc, jnp.broadcast_to(preds[:, None], (bq, cap * k)),
-                           cpos_safe)
-            cvalid = valid[:, :, None].repeat(k, axis=2).reshape(bq, cap * k) & (cbit == 1)
-            valid, _, ovf, (pos, base) = _compact_rows(
-                cvalid, cap, cpos_safe, cbase.reshape(bq, cap * k)
-            )
-            overflow = overflow | ovf
-            pos = jnp.where(valid, pos, 0)
-
-        valid, count, ovf, (ids,) = _compact_rows(valid, cap, base)
+        ids, valid, count, ovf = _traverse(
+            meta, cap, preds_ref[...], keys_ref[...], axes_ref[...] == 0,
+            t_words_ref[...], t_rank_ref[...], l_words_ref[...],
+            ones_before_ref[...], level_start_ref[...],
+        )
         ids_ref[...] = ids
         valid_ref[...] = valid
         count_ref[...] = count
-        ovf_ref[...] = overflow | ovf
+        ovf_ref[...] = ovf
 
     return kernel
 
@@ -202,4 +209,118 @@ def k2_scan(
         ),
         interpret=interpret,
     )(preds.astype(jnp.int32), keys.astype(jnp.int32), axes.astype(jnp.int32),
+      t_words, t_rank, l_words, ones_before, level_start)
+
+
+# ---------------------------------------------------------------------------
+# fused scan → rebind (join categories D–F: resolve ?X, re-bind into pattern 2)
+# ---------------------------------------------------------------------------
+
+
+def _make_scan_rebind_kernel(meta: K2Meta, cap_x: int, cap_y: int):
+    def kernel(preds1_ref, keys1_ref, axes1_ref, preds2_ref, axes2_ref,
+               t_words_ref, t_rank_ref, l_words_ref, ones_before_ref,
+               level_start_ref,
+               x_ids_ref, x_valid_ref, x_count_ref, x_ovf_ref,
+               y_ids_ref, y_valid_ref, y_count_ref, y_ovf_ref):
+        t_words = t_words_ref[...]
+        t_rank = t_rank_ref[...]
+        l_words = l_words_ref[...]
+        ones_before = ones_before_ref[...]
+        level_start = level_start_ref[...]
+
+        preds1 = preds1_ref[...]                      # (BQ,)
+        bq = preds1.shape[0]
+        x_ids, x_valid, x_count, x_ovf = _traverse(
+            meta, cap_x, preds1, keys1_ref[...], axes1_ref[...] == 0,
+            t_words, t_rank, l_words, ones_before, level_start,
+        )
+
+        # re-bind: every X lane becomes a pattern-2 query.  Dead lanes scan
+        # key 0 (the caller masks y_valid with x_valid) — this matches the
+        # jnp composition's clamp-to-a-safe-id exactly, bit for bit.
+        keys2 = jnp.where(x_valid, x_ids, 0).reshape(bq * cap_x)
+        preds2 = jnp.broadcast_to(
+            preds2_ref[...][:, None], (bq, cap_x)
+        ).reshape(bq * cap_x)
+        is_row2 = jnp.broadcast_to(
+            (axes2_ref[...] == 0)[:, None], (bq, cap_x)
+        ).reshape(bq * cap_x)
+        y_ids, y_valid, y_count, y_ovf = _traverse(
+            meta, cap_y, preds2, keys2, is_row2,
+            t_words, t_rank, l_words, ones_before, level_start,
+        )
+
+        x_ids_ref[...] = x_ids
+        x_valid_ref[...] = x_valid
+        x_count_ref[...] = x_count
+        x_ovf_ref[...] = x_ovf
+        y_ids_ref[...] = y_ids.reshape(bq, cap_x, cap_y)
+        y_valid_ref[...] = y_valid.reshape(bq, cap_x, cap_y)
+        y_count_ref[...] = y_count.reshape(bq, cap_x)
+        y_ovf_ref[...] = y_ovf.reshape(bq, cap_x)
+
+    return kernel
+
+
+@functools.partial(
+    jax.jit, static_argnames=("meta", "cap_x", "cap_y", "block_q", "interpret")
+)
+def k2_scan_rebind(
+    meta: K2Meta,
+    preds1: jax.Array,
+    keys1: jax.Array,
+    axes1: jax.Array,
+    preds2: jax.Array,
+    axes2: jax.Array,
+    t_words: jax.Array,
+    t_rank: jax.Array,
+    l_words: jax.Array,
+    ones_before: jax.Array,
+    level_start: jax.Array,
+    *,
+    cap_x: int,
+    cap_y: int,
+    block_q: int = 1,
+    interpret: bool = False,
+):
+    """Fused X-resolution + re-bind: two chained traversals, one kernel.
+
+    Per query lane: scan (preds1, keys1, axes1) into a ``cap_x`` side-list of
+    ?X candidates, then — without leaving VMEM — run ``cap_x`` pattern-2
+    scans (preds2, X, axes2) at ``cap_y`` each.  Returns
+    ``(x_ids, x_valid, x_count, x_overflow, y_ids, y_valid, y_count,
+    y_overflow)`` shaped ``(Q,cap_x) ×2, (Q,) ×2, (Q,cap_x,cap_y) ×2,
+    (Q,cap_x) ×2``.  Q must divide by block_q.
+    """
+    (q,) = preds1.shape
+    assert q % block_q == 0, (q, block_q)
+    grid = (q // block_q,)
+    whole = lambda a: pl.BlockSpec(a.shape, lambda i: tuple(0 for _ in a.shape))
+    qvec = pl.BlockSpec((block_q,), lambda i: (i,))
+    qx = pl.BlockSpec((block_q, cap_x), lambda i: (i, 0))
+    qxy = pl.BlockSpec((block_q, cap_x, cap_y), lambda i: (i, 0, 0))
+    return pl.pallas_call(
+        _make_scan_rebind_kernel(meta, cap_x, cap_y),
+        grid=grid,
+        in_specs=[
+            qvec, qvec, qvec, qvec, qvec,
+            whole(t_words), whole(t_rank), whole(l_words),
+            whole(ones_before), whole(level_start),
+        ],
+        out_specs=(qx, qx, qvec, qvec, qxy, qxy, qx, qx),
+        out_shape=(
+            jax.ShapeDtypeStruct((q, cap_x), jnp.int32),
+            jax.ShapeDtypeStruct((q, cap_x), jnp.bool_),
+            jax.ShapeDtypeStruct((q,), jnp.int32),
+            jax.ShapeDtypeStruct((q,), jnp.bool_),
+            jax.ShapeDtypeStruct((q, cap_x, cap_y), jnp.int32),
+            jax.ShapeDtypeStruct((q, cap_x, cap_y), jnp.bool_),
+            jax.ShapeDtypeStruct((q, cap_x), jnp.int32),
+            jax.ShapeDtypeStruct((q, cap_x), jnp.bool_),
+        ),
+        interpret=interpret,
+    )(preds1.astype(jnp.int32), keys1.astype(jnp.int32),
+      axes1.astype(jnp.int32), preds2.astype(jnp.int32),
+      axes2.astype(jnp.int32),
       t_words, t_rank, l_words, ones_before, level_start)

@@ -1,20 +1,27 @@
 """Public jit'd entry points for the kernel layer.
 
-Environment flags (read once at import):
+Environment flags:
 
 ``REPRO_PALLAS_INTERPRET``
-    "1" (default off-TPU) flips every Pallas kernel into interpret mode —
-    the CPU correctness path used by this container (TPU is the compile
-    target).  On a real TPU backend set ``REPRO_PALLAS_INTERPRET=0`` (the
-    default there: interpret only engages when the backend is not TPU).
+    (read once at import) "1" (default off-TPU) flips every Pallas kernel
+    into interpret mode — the CPU correctness path used by this container
+    (TPU is the compile target).  On a real TPU backend set
+    ``REPRO_PALLAS_INTERPRET=0`` (the default there: interpret only engages
+    when the backend is not TPU).
 
 ``REPRO_SCAN_BACKEND``
-    Selects the implementation behind ``core.k2forest.scan_batch_mixed``
-    (the (S,P,?O)/(?S,P,O) serve hot path):
+    (re-read on every resolve — flipping the var mid-session takes effect
+    on the next *trace*: eager calls and fresh jit traces see the new
+    value, but a function already jit-compiled keeps the backend baked in
+    at trace time) Selects the traversal substrate behind
+    ``core.k2forest`` batch scans — ``scan_batch_mixed`` (the
+    (S,P,?O)/(?S,P,O) serve hot path + all-preds sweeps),
+    ``range_scan_batch`` ((?S,P,?O) pair enumeration), and
+    ``scan_rebind_batch`` (join categories D–F):
 
-      * ``"pallas"`` (default) — the batched ``k2_scan`` kernel
-        (``kernels/k2_scan.py``): whole-arena VMEM residency, one grid step
-        per query block.
+      * ``"pallas"`` (default) — the batched kernels (``kernels/k2_scan.py``
+        / ``kernels/k2_range.py``): whole-arena VMEM residency, one grid
+        step per query block.
       * ``"jnp"`` — the vmapped pure-jnp level-synchronous traversal
         (the pre-kernel path; also the differential reference).
 
@@ -31,6 +38,7 @@ import jax.numpy as jnp
 from repro.core.k2tree import K2Meta, K2Tree
 from repro.kernels import block_spmm as _bs
 from repro.kernels import k2_check as _kc
+from repro.kernels import k2_range as _kr
 from repro.kernels import k2_scan as _ks
 from repro.kernels import popcount as _pc
 from repro.kernels import sorted_intersect as _si
@@ -39,12 +47,17 @@ INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0" and (
     jax.default_backend() != "tpu"
 )
 
-SCAN_BACKEND = os.environ.get("REPRO_SCAN_BACKEND", "pallas")
+DEFAULT_SCAN_BACKEND = "pallas"
 
 
 def scan_backend(override: str | None = None) -> str:
-    """Resolve the scan backend ("pallas" | "jnp")."""
-    b = override or SCAN_BACKEND
+    """Resolve the scan backend ("pallas" | "jnp").
+
+    Re-reads ``REPRO_SCAN_BACKEND`` from the environment on every call, so
+    flipping the flag after import (as a test or notebook naturally does)
+    is honored — the value is NOT latched at import time.
+    """
+    b = override or os.environ.get("REPRO_SCAN_BACKEND", DEFAULT_SCAN_BACKEND)
     if b not in ("pallas", "jnp"):
         raise ValueError(f"unknown scan backend {b!r} (want 'pallas' or 'jnp')")
     return b
@@ -104,6 +117,72 @@ def k2_scan_forest(
         cap=cap, block_q=bq, interpret=INTERPRET,
     )
     return ids[:q], valid[:q], count[:q], overflow[:q]
+
+
+def k2_range_forest(
+    meta: K2Meta,
+    forest,
+    preds: jax.Array,
+    *,
+    cap: int,
+    block_q: int = 8,
+):
+    """Kernel-backed batched (?S,P,?O) pair enumeration over a K2Forest.
+
+    Drop-in compute for ``core.k2forest.range_scan_batch`` (which routes
+    here when the scan backend is "pallas").  Queries are padded up to a
+    ``block_q`` multiple; padded lanes enumerate tree 0 and are sliced off.
+    Returns (rows, cols, valid, count, overflow).
+    """
+    (q,) = jnp.shape(preds)
+    bq = min(block_q, max(1, q))
+    pad = (-q) % bq
+    preds = jnp.asarray(preds, jnp.int32)
+    if pad:
+        preds = jnp.pad(preds, (0, pad))
+    rows, cols, valid, count, overflow = _kr.k2_range(
+        meta, preds,
+        forest.t_words, forest.t_rank, forest.l_words,
+        forest.ones_before, forest.level_start,
+        cap=cap, block_q=bq, interpret=INTERPRET,
+    )
+    return rows[:q], cols[:q], valid[:q], count[:q], overflow[:q]
+
+
+def k2_scan_rebind_forest(
+    meta: K2Meta,
+    forest,
+    preds1: jax.Array,
+    keys1: jax.Array,
+    axes1: jax.Array,
+    preds2: jax.Array,
+    axes2: jax.Array,
+    *,
+    cap_x: int,
+    cap_y: int,
+    block_q: int = 1,
+):
+    """Kernel-backed fused X-scan + re-bind (join categories D–F).
+
+    Drop-in compute for ``core.k2forest.scan_rebind_batch`` (which routes
+    here when the scan backend is "pallas").  The default ``block_q=1``
+    bounds the rebind frontier VMEM at cap_x·cap_y·k lanes per grid step.
+    Returns the kernel's 8-tuple (x_ids, x_valid, x_count, x_overflow,
+    y_ids, y_valid, y_count, y_overflow).
+    """
+    (q,) = jnp.shape(preds1)
+    bq = min(block_q, max(1, q))
+    pad = (-q) % bq
+    arrs = [jnp.asarray(a, jnp.int32) for a in (preds1, keys1, axes1, preds2, axes2)]
+    if pad:
+        arrs = [jnp.pad(a, (0, pad)) for a in arrs]
+    out = _ks.k2_scan_rebind(
+        meta, *arrs,
+        forest.t_words, forest.t_rank, forest.l_words,
+        forest.ones_before, forest.level_start,
+        cap_x=cap_x, cap_y=cap_y, block_q=bq, interpret=INTERPRET,
+    )
+    return tuple(a[:q] for a in out)
 
 
 def sorted_intersect_mask(a_ids: jax.Array, b_ids: jax.Array) -> jax.Array:

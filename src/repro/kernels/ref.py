@@ -113,6 +113,110 @@ def k2_scan_ref(
     )
 
 
+def k2_range_ref(
+    meta: K2Meta,
+    preds: jax.Array,
+    t_words: jax.Array,
+    t_rank: jax.Array,
+    l_words: jax.Array,
+    ones_before: jax.Array,
+    level_start: jax.Array,
+    *,
+    cap: int,
+):
+    """Identical semantics to kernels.k2_range, phrased on raw forest arrays.
+
+    Like ``k2_scan_ref`` this deliberately uses the scatter-based
+    ``_compact`` (vs the kernel's stable argsort) so agreement checks two
+    independent compaction algorithms.  Level 0 bit-tests every root child
+    and only then compacts — the fixed overflow semantics.  Returns
+    ``(rows, cols, valid, count, overflow)``.
+    """
+    from repro.core.k2tree import _compact
+
+    H = meta.n_levels
+
+    def one(pred):
+        pred = pred.astype(jnp.int32)
+        k0, r0, sub0 = meta.ks[0], meta.radices[0], meta.subsides[0]
+        d0 = jnp.arange(r0, dtype=jnp.int32)
+        words0 = l_words if H == 1 else t_words
+        bit0 = bitvec.get_bit_2d(words0, pred, d0)
+        valid, _, ovf, (pos, rbase, cbase) = _compact(
+            bit0 == 1, cap, d0, (d0 // k0) * sub0, (d0 % k0) * sub0
+        )
+        overflow = ovf
+        pos = jnp.where(valid, pos, 0)
+
+        for lvl in range(H - 1):
+            last_child = lvl + 1 == H - 1
+            k, r, sub = meta.ks[lvl + 1], meta.radices[lvl + 1], meta.subsides[lvl + 1]
+            j = bitvec.rank1_2d(t_words, t_rank, pred, pos) - ones_before[pred, lvl]
+            child_base0 = level_start[pred, lvl + 1] + j * r
+            d = jnp.arange(r, dtype=jnp.int32)
+            cpos = child_base0[:, None] + d[None, :]
+            crb = rbase[:, None] + (d[None, :] // k) * sub
+            ccb = cbase[:, None] + (d[None, :] % k) * sub
+            wordsc = l_words if last_child else t_words
+            cbit = bitvec.get_bit_2d(wordsc, pred, jnp.where(valid[:, None], cpos, 0))
+            cvalid = valid[:, None] & (cbit == 1)
+            valid, _, ovf, (pos, rbase, cbase) = _compact(
+                cvalid.reshape(-1), cap, cpos.reshape(-1), crb.reshape(-1),
+                ccb.reshape(-1)
+            )
+            overflow = overflow | ovf
+            pos = jnp.where(valid, pos, 0)
+
+        valid, count, ovf, (rows, cols) = _compact(valid, cap, rbase, cbase)
+        return rows, cols, valid, count, overflow | ovf
+
+    return jax.vmap(one)(jnp.asarray(preds, jnp.int32))
+
+
+def k2_scan_rebind_ref(
+    meta: K2Meta,
+    preds1: jax.Array,
+    keys1: jax.Array,
+    axes1: jax.Array,
+    preds2: jax.Array,
+    axes2: jax.Array,
+    t_words: jax.Array,
+    t_rank: jax.Array,
+    l_words: jax.Array,
+    ones_before: jax.Array,
+    level_start: jax.Array,
+    *,
+    cap_x: int,
+    cap_y: int,
+):
+    """Fused scan→rebind reference: ``k2_scan_ref`` composed with itself.
+
+    Dead X lanes are clamped to key 0 exactly as the kernel does (their
+    ``y_valid`` rows are masked by the caller).  Returns the kernel's 8-tuple.
+    """
+    q = jnp.shape(preds1)[0]
+    x_ids, x_valid, x_count, x_ovf = k2_scan_ref(
+        meta, preds1, keys1, axes1, t_words, t_rank, l_words,
+        ones_before, level_start, cap=cap_x,
+    )
+    keys2 = jnp.where(x_valid, x_ids, 0).reshape(q * cap_x)
+    p2 = jnp.broadcast_to(
+        jnp.asarray(preds2, jnp.int32)[:, None], (q, cap_x)
+    ).reshape(q * cap_x)
+    a2 = jnp.broadcast_to(
+        jnp.asarray(axes2, jnp.int32)[:, None], (q, cap_x)
+    ).reshape(q * cap_x)
+    y_ids, y_valid, y_count, y_ovf = k2_scan_ref(
+        meta, p2, keys2, a2, t_words, t_rank, l_words,
+        ones_before, level_start, cap=cap_y,
+    )
+    return (
+        x_ids, x_valid, x_count, x_ovf,
+        y_ids.reshape(q, cap_x, cap_y), y_valid.reshape(q, cap_x, cap_y),
+        y_count.reshape(q, cap_x), y_ovf.reshape(q, cap_x),
+    )
+
+
 def sorted_intersect_mask_ref(a_ids: jax.Array, b_ids: jax.Array) -> jax.Array:
     pos = jnp.searchsorted(b_ids, a_ids)
     got = jnp.take(b_ids, jnp.clip(pos, 0, b_ids.shape[0] - 1), mode="clip")

@@ -57,9 +57,62 @@ def assert_scan_result(ids, valid, count, overflow, truth: np.ndarray, cap: int,
         )
 
 
+def morton_pairs_truth(dense: np.ndarray, ks) -> tuple[np.ndarray, np.ndarray]:
+    """All 1-cells of ``dense`` in the k²-tree's Morton (level-order) sequence.
+
+    ``range_scan`` emits pairs in mixed-radix Morton order — the order the
+    paper's DFS visits leaves — so the oracle sorts by the same code the
+    host-side builder assigns.
+    """
+    rows, cols = np.nonzero(dense)
+    r = rows.astype(np.int64)
+    c = cols.astype(np.int64)
+    code = np.zeros(r.shape[0], np.int64)
+    s = int(np.prod(ks))
+    for k in ks:
+        s //= k
+        code = code * (k * k) + (r // s) * k + (c // s)
+        r %= s
+        c %= s
+    order = np.argsort(code)
+    return rows[order].astype(np.int32), cols[order].astype(np.int32)
+
+
+def assert_pair_result(rows, cols, valid, count, overflow,
+                       truth_rows: np.ndarray, truth_cols: np.ndarray,
+                       cap: int, label=""):
+    """Check one capped range-scan (pair) result against the Morton truth."""
+    rows = np.asarray(rows)
+    cols = np.asarray(cols)
+    valid = np.asarray(valid)
+    count = int(count)
+    overflow = bool(overflow)
+    n_truth = len(truth_rows)
+    assert count <= cap, f"{label}: count {count} > cap {cap}"
+    assert count <= n_truth, f"{label}: count {count} > truth {n_truth}"
+    assert (valid == (np.arange(cap) < count)).all(), f"{label}: valid mask"
+    assert (rows[~valid] == 0).all() and (cols[~valid] == 0).all(), (
+        f"{label}: dead lanes not zeroed"
+    )
+    # returned pairs are a prefix of the Morton-ordered truth: truncation
+    # keeps the earliest subtrees, whose cells all precede any dropped ones
+    assert (rows[:count] == truth_rows[:count]).all(), (
+        f"{label}: rows {rows[:count]} != truth prefix {truth_rows[:count]}"
+    )
+    assert (cols[:count] == truth_cols[:count]).all(), (
+        f"{label}: cols {cols[:count]} != truth prefix {truth_cols[:count]}"
+    )
+    if not overflow:
+        assert count == n_truth, (
+            f"{label}: no overflow but count {count} != |truth| {n_truth}"
+        )
+
+
 def assert_results_identical(a, b, label=""):
-    """Bit-exact agreement between two (ids, valid, count, overflow) tuples."""
-    names = ("ids", "valid", "count", "overflow")
+    """Bit-exact agreement between two result tuples (any field count)."""
+    assert len(a) == len(b), f"{label}: arity {len(a)} vs {len(b)}"
+    names = [f"field{i}" for i in range(len(a))]
+    names[: min(len(a), 4)] = ("ids", "valid", "count", "overflow")[: len(a)]
     for name, x, y in zip(names, a, b):
         x, y = np.asarray(x), np.asarray(y)
         assert x.shape == y.shape, f"{label}:{name} shape {x.shape} vs {y.shape}"

@@ -1,0 +1,55 @@
+"""Regression: ``REPRO_SCAN_BACKEND`` must be re-read, not latched at import.
+
+The original ``kernels/ops.py`` captured the env var once into a module
+constant, so a test or notebook setting it after import was silently
+ignored.  ``scan_backend()`` now consults the environment on every call.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import k2forest
+from repro.core.k2tree import K2Meta, hybrid_ks
+from repro.kernels import ops
+
+
+def test_scan_backend_rereads_env(monkeypatch):
+    monkeypatch.setenv("REPRO_SCAN_BACKEND", "jnp")
+    assert ops.scan_backend() == "jnp"
+    # flipping AFTER the first resolve must take effect — the regression
+    monkeypatch.setenv("REPRO_SCAN_BACKEND", "pallas")
+    assert ops.scan_backend() == "pallas"
+    monkeypatch.setenv("REPRO_SCAN_BACKEND", "jnp")
+    assert ops.scan_backend() == "jnp"
+    monkeypatch.delenv("REPRO_SCAN_BACKEND")
+    assert ops.scan_backend() == ops.DEFAULT_SCAN_BACKEND == "pallas"
+
+
+def test_scan_backend_override_and_validation(monkeypatch):
+    monkeypatch.setenv("REPRO_SCAN_BACKEND", "jnp")
+    assert ops.scan_backend("pallas") == "pallas"  # per-call override wins
+    with pytest.raises(ValueError):
+        ops.scan_backend("bogus")
+    monkeypatch.setenv("REPRO_SCAN_BACKEND", "bogus")
+    with pytest.raises(ValueError):
+        ops.scan_backend()
+
+
+def test_env_flip_switches_dispatch(monkeypatch):
+    """Both env values drive scan_batch_mixed to identical results — the
+    flag actually reaches the dispatch site after an in-session flip."""
+    rng = np.random.default_rng(31)
+    side = 60
+    meta = K2Meta(hybrid_ks(side))
+    f, _ = k2forest.build_forest(
+        [(rng.integers(0, side, 120), rng.integers(0, side, 120))], meta
+    )
+    preds = np.zeros(4, np.int32)
+    keys = rng.integers(0, side, 4)
+    axes = np.array([0, 1, 0, 1], np.int32)
+    out = {}
+    for be in ("jnp", "pallas"):
+        monkeypatch.setenv("REPRO_SCAN_BACKEND", be)
+        out[be] = k2forest.scan_batch_mixed(meta, f, preds, keys, axes, 32)
+    for a, b in zip(tuple(out["jnp"]), tuple(out["pallas"])):
+        assert (np.asarray(a) == np.asarray(b)).all()

@@ -1,0 +1,230 @@
+"""Differential coverage for the kernel-backed join pipeline (categories A–F).
+
+Every category runs on both scan backends and must agree bit-exactly —
+"pallas" drives the batched ``k2_scan`` / fused ``k2_scan_rebind`` kernels,
+"jnp" the vmapped reference traversal — and against a brute-force Python-set
+oracle.  Includes the fused scan→rebind primitive itself (vs the jnp
+composition and the scatter-compaction ref), per-predicate overflow
+surfacing, cap-overflow truncation, and empty-predicate lanes.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import joins, k2forest, k2triples, sortedset
+from repro.core.k2tree import K2Meta, hybrid_ks
+from repro.kernels import ref
+
+from oracle import assert_results_identical, dense_from_coords
+
+
+@pytest.fixture(scope="module")
+def store_and_oracle():
+    """A store with skewed predicates: pred 3 empty, pred 1 dense."""
+    rng = np.random.default_rng(21)
+    n_s, n_p, n_o = 90, 5, 110
+    trips = set()
+    for _ in range(2500):
+        p = int(rng.integers(1, n_p + 1))
+        if p == 3:
+            continue  # empty predicate lane
+        trips.add((int(rng.integers(1, n_s + 1)), p, int(rng.integers(1, n_o + 1))))
+    ids = np.array(sorted(trips), np.int64)
+    store = k2triples.from_id_triples(
+        ids, n_so=min(n_s, n_o), n_subjects=n_s, n_objects=n_o, n_preds=n_p,
+    )
+    return store, trips
+
+
+def _both(fn):
+    """Run a join closure on both backends, assert bit-exact, return pallas."""
+    rp, rj = fn("pallas"), fn("jnp")
+    assert_results_identical(tuple(rp), tuple(rj), type(rp).__name__)
+    return rp
+
+
+def _side(T, p, const, vpos):
+    if vpos == "s":
+        return sorted({s for (s, pp, o) in T if (p is None or pp == p) and o == const})
+    return sorted({o for (s, pp, o) in T if (p is None or pp == p) and s == const})
+
+
+def test_join_a_b_c_backends_and_oracle(store_and_oracle):
+    store, T = store_and_oracle
+    m, f = store.meta, store.forest
+    cap = 256
+    # constants chosen from real triples so sides are non-empty
+    (s1, p1, o1), (s2, p2, o2) = sorted(T)[10], sorted(T)[500]
+
+    ra = _both(lambda be: joins.join_a(m, f, p1, o1, "s", p2, o2, "s", cap, be))
+    got = np.asarray(ra.ids)[np.asarray(ra.valid)].tolist()
+    assert got == sorted(set(_side(T, p1, o1, "s")) & set(_side(T, p2, o2, "s")))
+
+    rb = _both(lambda be: joins.join_b(m, f, p1, o1, "s", o2, "s", cap, be))
+    l1 = set(_side(T, p1, o1, "s"))
+    for pp in range(1, 6):
+        exp = sorted(l1 & set(_side(T, pp, o2, "s")))
+        assert np.asarray(rb.ids[pp - 1])[np.asarray(rb.valid[pp - 1])].tolist() == exp
+        assert int(rb.counts[pp - 1]) == len(exp)
+    # per-pred overflow vector, no truncation at this cap
+    assert rb.overflow.shape == (5,)
+    assert not np.asarray(rb.overflow).any()
+
+    rc = _both(lambda be: joins.join_c(m, f, o1, "s", o2, "s", cap, be))
+    got = np.asarray(rc.ids)[np.asarray(rc.valid)].tolist()
+    assert got == sorted(set(_side(T, None, o1, "s")) & set(_side(T, None, o2, "s")))
+
+
+def test_join_d_e_f_backends_and_oracle(store_and_oracle):
+    store, T = store_and_oracle
+    m, f = store.meta, store.forest
+    cap_x, cap_y = 128, 64
+    (s1, p1, o1) = sorted(T)[33]
+
+    rd = _both(lambda be: joins.join_d(m, f, p1, o1, "s", 2, "o", cap_x, cap_y, be))
+    xs = _side(T, p1, o1, "s")
+    assert np.asarray(rd.x_ids)[np.asarray(rd.x_valid)].tolist() == xs
+    for i, x in enumerate(xs):
+        exp = sorted({ss for (ss, pp, oo) in T if pp == 2 and oo == x})
+        got = np.asarray(rd.y_ids[i])[np.asarray(rd.y_valid[i])].tolist()
+        assert got == exp
+    assert rd.overflow.shape == ()
+
+    re_ = _both(lambda be: joins.join_e(m, f, p1, o1, "s", "o", cap_x, cap_y, be))
+    assert re_.overflow.shape == (5,)
+    for pp in range(1, 6):
+        for i, x in enumerate(xs):
+            exp = sorted({ss for (ss, p3, oo) in T if p3 == pp and oo == x})
+            got = np.asarray(re_.y_ids[pp - 1, i])[np.asarray(re_.y_valid[pp - 1, i])]
+            assert got.tolist() == exp, (pp, x)
+    # pred 3 is empty: its lane yields nothing and no overflow
+    assert not np.asarray(re_.y_valid[2]).any()
+    assert not bool(np.asarray(re_.overflow)[2])
+
+    rf = _both(lambda be: joins.join_f(m, f, o1, "s", "o", cap_x, cap_y, be))
+    assert rf.overflow.shape == (5,)
+    xs_f = _side(T, None, o1, "s")
+    assert np.asarray(rf.x_ids[0])[np.asarray(rf.x_valid[0])].tolist() == xs_f
+    for pp in range(1, 6):
+        for i, x in enumerate(xs_f):
+            exp = sorted({ss for (ss, p3, oo) in T if p3 == pp and oo == x})
+            got = np.asarray(rf.y_ids[pp - 1, i])[np.asarray(rf.y_valid[pp - 1, i])]
+            assert got.tolist() == exp, (pp, x)
+
+
+def test_join_empty_sides(store_and_oracle):
+    """Queries against the empty predicate: empty results on every backend."""
+    store, T = store_and_oracle
+    m, f = store.meta, store.forest
+    ra = _both(lambda be: joins.join_a(m, f, 3, 1, "s", 3, 2, "s", 64, be))
+    assert not np.asarray(ra.valid).any()
+    rd = _both(lambda be: joins.join_d(m, f, 3, 1, "s", 1, "o", 32, 16, be))
+    assert not np.asarray(rd.x_valid).any()
+    assert not np.asarray(rd.y_valid).any()
+    assert not bool(rd.overflow)
+
+
+def test_join_y_cap_overflow_per_pred(store_and_oracle):
+    """Tiny cap_y truncates Y lists; overflow is per-pred and only where real.
+
+    cap_y == k0 keeps the initial frontier un-truncated (cap below the root
+    arity latches overflow unconditionally — the scan's documented
+    conservative floor), so the empty predicate's lane must stay clean.
+    """
+    store, T = store_and_oracle
+    m, f = store.meta, store.forest
+    cap_y = m.ks[0]  # == 4
+    (s1, p1, o1) = sorted(T)[33]
+    r = _both(lambda be: joins.join_e(m, f, p1, o1, "s", "o", 128, cap_y, be))
+    ovf = np.asarray(r.overflow)
+    xs = _side(T, p1, o1, "s")
+    for pp in range(1, 6):
+        truncated = any(
+            len({ss for (ss, p3, oo) in T if p3 == pp and oo == x}) > cap_y
+            for x in xs
+        )
+        # overflow may be conservatively latched by intermediate frontiers,
+        # but a pred with an actually-truncated Y list MUST flag, and the
+        # empty pred (no frontiers at all) must NOT
+        if truncated:
+            assert ovf[pp - 1], pp
+    assert not ovf[2]  # empty predicate
+    # truncated Y lists still return the sorted prefix
+    for pp in range(1, 6):
+        for i, x in enumerate(xs):
+            exp = sorted({ss for (ss, p3, oo) in T if p3 == pp and oo == x})
+            got = np.asarray(r.y_ids[pp - 1, i])[np.asarray(r.y_valid[pp - 1, i])]
+            assert got.tolist() == exp[: len(got)]
+
+
+def test_scan_rebind_primitive_three_way():
+    """The fused primitive: kernel vs jnp composition vs scatter-compaction
+    ref, on randomized forests, bit-exact across all 8 outputs."""
+    rng = np.random.default_rng(22)
+    for side, n_preds, nnz in [(60, 3, 250), (200, 2, 600)]:
+        meta = K2Meta(hybrid_ks(side))
+        coords = [
+            (rng.integers(0, side, nnz), rng.integers(0, side, nnz))
+            for _ in range(n_preds)
+        ]
+        f, _ = k2forest.build_forest(coords, meta)
+        q = 6
+        preds1 = rng.integers(0, n_preds, q)
+        keys1 = rng.integers(0, side, q)
+        axes1 = rng.integers(0, 2, q)
+        preds2 = rng.integers(0, n_preds, q)
+        axes2 = rng.integers(0, 2, q)
+        args = (preds1, keys1, axes1, preds2, axes2)
+        for cap_x, cap_y in [(16, 8), (64, 4)]:
+            o_pl = k2forest.scan_rebind_batch(meta, f, *args, cap_x, cap_y, "pallas")
+            o_j = k2forest.scan_rebind_batch(meta, f, *args, cap_x, cap_y, "jnp")
+            o_r = ref.k2_scan_rebind_ref(
+                meta, *(jnp.asarray(a, jnp.int32) for a in args),
+                t_words=f.t_words, t_rank=f.t_rank, l_words=f.l_words,
+                ones_before=f.ones_before, level_start=f.level_start,
+                cap_x=cap_x, cap_y=cap_y,
+            )
+            names = ("x_ids", "x_valid", "x_count", "x_ovf",
+                     "y_ids", "y_valid", "y_count", "y_ovf")
+            for nm, a, b in zip(names, o_pl, o_j):
+                assert (np.asarray(a) == np.asarray(b)).all(), (side, nm, "p-vs-j")
+            for nm, a, b in zip(names, o_pl, o_r):
+                assert (np.asarray(a) == np.asarray(b)).all(), (side, nm, "p-vs-ref")
+            # dense-oracle spot check: each valid X lane's Y list is the
+            # true row/col line of the rebound key
+            dense = dense_from_coords(coords, meta.side)
+            x_ids, x_valid = np.asarray(o_pl[0]), np.asarray(o_pl[1])
+            y_ids, y_valid = np.asarray(o_pl[4]), np.asarray(o_pl[5])
+            y_ovf = np.asarray(o_pl[7])
+            for qi in range(q):
+                for xi in range(cap_x):
+                    if not x_valid[qi, xi]:
+                        continue
+                    d = dense[preds2[qi]]
+                    line = (d[x_ids[qi, xi]] if axes2[qi] == 0
+                            else d[:, x_ids[qi, xi]])
+                    exp = np.nonzero(line)[0]
+                    got = y_ids[qi, xi][y_valid[qi, xi]]
+                    if y_ovf[qi, xi]:
+                        assert (got == exp[: len(got)]).all()
+                    else:
+                        assert (got == exp).all()
+
+
+def test_rebind_ref_wrapper_signature():
+    """k2_scan_rebind_ref accepts positional arena arrays too (kernels parity)."""
+    rng = np.random.default_rng(23)
+    side = 60
+    meta = K2Meta(hybrid_ks(side))
+    coords = [(rng.integers(0, side, 100), rng.integers(0, side, 100))]
+    f, _ = k2forest.build_forest(coords, meta)
+    out = ref.k2_scan_rebind_ref(
+        meta, jnp.zeros(2, jnp.int32), jnp.asarray([0, 5], jnp.int32),
+        jnp.zeros(2, jnp.int32), jnp.zeros(2, jnp.int32),
+        jnp.ones(2, jnp.int32),
+        f.t_words, f.t_rank, f.l_words, f.ones_before, f.level_start,
+        cap_x=8, cap_y=8,
+    )
+    assert out[0].shape == (2, 8)
+    assert out[4].shape == (2, 8, 8)

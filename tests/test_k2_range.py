@@ -1,0 +1,185 @@
+"""Differential harness for the batched k²-range Pallas kernel ((?S,P,?O)).
+
+Three-way agreement on every case:
+
+    kernels.k2_range (interpret)  ==  kernels.ref.k2_range_ref (jnp, scatter
+    compaction)  ==  core.k2forest.range_scan_batch(backend="jnp") (vmapped
+    traversal)                      — bit-exact, all five output arrays;
+
+and each against the numpy Morton-order oracle (tests/oracle.py) for the
+capped fixed-shape ``PairResult`` contract.  Includes the level-0 overflow
+regression: the pre-fix traversal truncated the root radix to ``cap``
+*before* the bit test, so a sparse matrix under a large root radix falsely
+reported overflow and silently dropped candidates.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import k2forest
+from repro.core.k2tree import K2Meta, hybrid_ks
+from repro.kernels import ref
+
+from oracle import (
+    assert_pair_result,
+    assert_results_identical,
+    dense_from_coords,
+    morton_pairs_truth,
+)
+
+
+def _forest(coords, side):
+    meta = K2Meta(hybrid_ks(side))
+    f, _ = k2forest.build_forest(coords, meta)
+    return meta, f
+
+
+def _run_all_backends(meta, f, preds, cap):
+    """(pallas, jnp, ref) results for one pred batch; asserts 3-way equality."""
+    preds = jnp.asarray(preds, jnp.int32)
+    r_pl = k2forest.range_scan_batch(meta, f, preds, cap, backend="pallas")
+    r_jnp = k2forest.range_scan_batch(meta, f, preds, cap, backend="jnp")
+    r_ref = ref.k2_range_ref(
+        meta, preds, f.t_words, f.t_rank, f.l_words,
+        f.ones_before, f.level_start, cap=cap,
+    )
+    assert_results_identical(tuple(r_pl), tuple(r_jnp), "pallas-vs-jnp")
+    assert_results_identical(tuple(r_pl), tuple(r_ref), "pallas-vs-ref")
+    return r_pl
+
+
+def _sweep(coords, side, caps, counter):
+    meta, f = _forest(coords, side)
+    dense = dense_from_coords(coords, meta.side)
+    P = len(coords)
+    truths = [morton_pairs_truth(d, meta.ks) for d in dense]
+    for cap in caps:
+        r = _run_all_backends(meta, f, np.arange(P, dtype=np.int32), cap)
+        for p in range(P):
+            tr, tc = truths[p]
+            assert_pair_result(
+                r.rows[p], r.cols[p], r.valid[p], r.count[p], r.overflow[p],
+                tr, tc, cap, label=f"side={side} cap={cap} pred={p}",
+            )
+            counter[0] += 1
+
+
+def test_k2_range_randomized_sweep():
+    """Randomized (matrix, cap) grid at three heights, 3-way + Morton oracle."""
+    counter = [0]
+    rng = np.random.default_rng(11)
+    for side, n_preds, nnz_hi, caps, seed in [
+        (60, 4, 300, (8, 64, 512), 1),    # H=3
+        (200, 3, 700, (16, 1024), 2),     # H=4
+        (900, 2, 1200, (32, 2048), 3),    # H=5, r0=16
+    ]:
+        coords = []
+        for _ in range(n_preds):
+            n = int(rng.integers(0, nnz_hi))
+            coords.append((rng.integers(0, side, n), rng.integers(0, side, n)))
+        _sweep(coords, side, caps, counter)
+    assert counter[0] >= 20, counter[0]
+
+
+def test_k2_range_empty_and_full():
+    side = 64
+    empty = np.zeros(0, np.int64)
+    rr = np.repeat(np.arange(side), side)
+    cc = np.tile(np.arange(side), side)
+    counter = [0]
+    _sweep([(empty, empty), (rr, cc)], side, caps=(1, 16, side * side), counter=counter)
+    meta, f = _forest([(empty, empty)], side)
+    r = _run_all_backends(meta, f, [0], 8)
+    assert not np.asarray(r.valid).any()
+    assert int(r.count[0]) == 0
+    assert not bool(r.overflow[0])
+
+
+def test_k2_range_single_cell_h1():
+    """Minimal geometry: the H==1 (L-only) tree."""
+    side = 2
+    meta, f = _forest([(np.array([1]), np.array([0]))], side)
+    assert meta.n_levels == 1
+    for cap in (1, 2, 4):
+        r = _run_all_backends(meta, f, [0], cap)
+        assert int(r.count[0]) == 1
+        assert not bool(r.overflow[0])
+        assert int(r.rows[0][0]) == 1 and int(r.cols[0][0]) == 0
+
+
+def test_k2_range_level0_overflow_regression():
+    """cap below the ROOT RADIX on a sparse matrix: the old traversal both
+    falsely latched overflow (r0 > cap) and dropped any candidate whose root
+    child index exceeded cap.  Fixed semantics: bit-test every root child,
+    compact, overflow only on real frontier truncation."""
+    side = 900  # H=5: root radix r0 = 16
+    meta = K2Meta(hybrid_ks(side))
+    assert meta.radices[0] == 16
+    # two cells in root children 0 and 15 — the second died under truncation
+    rows = np.array([3, 870])
+    cols = np.array([5, 2])
+    f, _ = k2forest.build_forest([(rows, cols)], meta)
+    cap = 4  # < r0
+    r = _run_all_backends(meta, f, [0], cap)
+    assert int(r.count[0]) == 2
+    assert not bool(r.overflow[0])  # 2 occupied root children <= cap
+    dense = dense_from_coords([(rows, cols)], meta.side)[0]
+    tr, tc = morton_pairs_truth(dense, meta.ks)
+    assert_pair_result(r.rows[0], r.cols[0], r.valid[0], r.count[0],
+                       r.overflow[0], tr, tc, cap, label="level0-regression")
+    # the single-tree jnp reference is fixed the same way
+    from repro.core import k2tree
+    tree = k2tree.build(rows, cols, meta)
+    rt = k2tree.range_scan(meta, tree, cap=cap)
+    assert int(rt.count) == 2 and not bool(rt.overflow)
+
+
+@pytest.mark.parametrize("cap_delta", [-1, 0, 1])
+def test_k2_range_cap_overflow_boundary(cap_delta):
+    """cap straddling the exact pair count: count/overflow semantics."""
+    side = 64
+    n = 30
+    rng = np.random.default_rng(12)
+    flat = rng.choice(side * side, n, replace=False)
+    rows, cols = flat // side, flat % side
+    meta, f = _forest([(rows, cols)], side)
+    cap = n + cap_delta
+    r = _run_all_backends(meta, f, [0], cap)
+    dense = dense_from_coords([(rows, cols)], meta.side)[0]
+    tr, tc = morton_pairs_truth(dense, meta.ks)
+    assert_pair_result(r.rows[0], r.cols[0], r.valid[0], r.count[0],
+                       r.overflow[0], tr, tc, cap, label=f"delta={cap_delta}")
+    if cap_delta < 0:
+        assert bool(r.overflow[0])
+        assert int(r.count[0]) == cap
+    else:
+        assert not bool(r.overflow[0])
+        assert int(r.count[0]) == n
+
+
+def test_k2_range_all_preds_dump():
+    """range_scan_all_preds == per-pred range_scan; follows the backend flag."""
+    side = 100
+    rng = np.random.default_rng(13)
+    coords = [
+        (rng.integers(0, side, 200), rng.integers(0, side, 200)),
+        (np.zeros(0, np.int64), np.zeros(0, np.int64)),  # empty predicate
+        (rng.integers(0, side, 50), rng.integers(0, side, 50)),
+    ]
+    meta, f = _forest(coords, side)
+    r_all = {be: k2forest.range_scan_all_preds(meta, f, 256, backend=be)
+             for be in ("pallas", "jnp")}
+    assert_results_identical(
+        tuple(r_all["pallas"]), tuple(r_all["jnp"]), "dump pallas-vs-jnp"
+    )
+    dense = dense_from_coords(coords, meta.side)
+    for p in range(3):
+        one = k2forest.range_scan(meta, f, p, 256, backend="pallas")
+        for a, b in zip(tuple(one), tuple(r_all["pallas"])):
+            assert (np.asarray(a) == np.asarray(b)[p]).all()
+        tr, tc = morton_pairs_truth(dense[p], meta.ks)
+        assert_pair_result(
+            one.rows, one.cols, one.valid, one.count, one.overflow,
+            tr, tc, 256, label=f"dump pred={p}",
+        )
