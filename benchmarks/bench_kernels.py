@@ -84,6 +84,27 @@ def run():
                  f"{arena_kib:.0f} KiB -> VMEM-resident; "
                  f"agrees bit-exact with jnp ref (tests/test_k2_scan.py)"))
 
+    # pred_gather: SP/OP candidate-predicate gather (pruned unbounded path)
+    from repro.core import predindex
+
+    gids = np.stack([
+        rng.integers(1, scan_side + 1, 120_000),
+        rng.integers(1, 65, 120_000),
+        rng.integers(1, scan_side + 1, 120_000),
+    ], axis=1)
+    bi = predindex.build(
+        gids, n_subjects=scan_side, n_objects=scan_side, n_preds=64
+    )
+    grows = jnp.asarray(rng.integers(0, scan_side, sq), jnp.int32)
+    for be, label in (("jnp", "jnp-ref"), ("pallas", "pallas-interp")):
+        f_g = jax.jit(lambda r, be=be: predindex.gather_batch(
+            bi.meta, bi.device, r, bi.meta.max_degree, be).ids)
+        t_g = _t(f_g, grows, n=3)
+        rows.append((f"pred_gather({label})", t_g * 1e3,
+                     f"{sq/t_g/1e3:.1f} Kgathers/s cpu (max degree "
+                     f"{bi.meta.max_degree}, {bi.meta.bytes_per_pred} B/entry, "
+                     f"index {bi.stats.payload_bits/8/1024:.0f} KiB)"))
+
     # k2_range: batched (?S,P,?O) pair enumeration (dataset-dump path)
     rcap = 512
     rq = jnp.asarray(rng.integers(0, 8, 64), jnp.int32)

@@ -1,13 +1,18 @@
 """Benchmark harness: one module per paper table + kernel microbenches.
 
-    PYTHONPATH=src python -m benchmarks.run [--fast]
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--json OUT.json]
 
-Emits CSV blocks per table (the EXPERIMENTS.md §Paper-validation source).
+Emits CSV blocks per table (the EXPERIMENTS.md §Paper-validation source;
+see EXPERIMENTS.md at the repo root for how to read each block, including
+the SP/OP index-overhead columns).  ``--json`` additionally writes every
+table as machine-readable JSON — CI uploads it as the ``BENCH_results``
+artifact, the start of the perf trajectory across PRs.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -15,50 +20,84 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true", help="smaller datasets")
+    ap.add_argument(
+        "--json", metavar="PATH", default=None,
+        help="also write all tables as JSON (e.g. BENCH_results.json)",
+    )
     args = ap.parse_args()
 
     from benchmarks import bench_compression, bench_joins, bench_kernels, bench_patterns
 
+    results: dict = {"fast": bool(args.fast)}
     t0 = time.time()
     print("=" * 72)
-    if args.fast:
-        print("# Table 2 analogue: compression (bits/triple, ID space)")
-        print("dataset,triples,preds,k2,raw,vertical,sextuple,x_vs_vertical,x_vs_sextuple")
-        for r in bench_compression.run(n_triples=30_000, datasets=("geonames", "dbtune")):
-            print(
-                f"{r['dataset']},{r['triples']},{r['preds']},"
-                f"{r['k2_bits_per_triple']:.2f},{r['raw_bits_per_triple']:.0f},"
-                f"{r['vertical_bits_per_triple']:.0f},{r['sextuple_bits_per_triple']:.2f},"
-                f"{r['vs_vertical']:.1f},{r['vs_sextuple']:.1f}"
-            )
-    else:
-        bench_compression.main()
-    print("=" * 72)
-    bench_patterns.main() if not args.fast else _patterns_fast()
-    print("=" * 72)
-    bench_joins.main() if not args.fast else _joins_fast()
-    print("=" * 72)
-    bench_kernels.main()
-    print("=" * 72)
-    print(f"# total {time.time()-t0:.0f}s")
+    print("# Table 2 analogue: compression (bits/triple, ID space)")
+    print(bench_compression.CSV_HEADER)
+    comp = (
+        bench_compression.run(n_triples=30_000, datasets=("geonames", "dbtune"))
+        if args.fast
+        else bench_compression.run()
+    )
+    for r in comp:
+        print(bench_compression.format_row(r))
+    results["compression"] = comp
 
-
-def _patterns_fast():
-    from benchmarks import bench_patterns
-
+    print("=" * 72)
     print("# Table 3 analogue: ms/pattern (k2 vs vertical tables)")
-    print("pattern,k2_ms,vertical_ms,speedup")
-    for k, (a, b) in bench_patterns.run(n_triples=30_000, n_preds=16, n_queries=20).items():
-        print(f"{k},{a:.3f},{b:.3f},{b/a:.1f}" if b == b else f"{k},{a:.4f},n/a,n/a")
+    print(bench_patterns.CSV_HEADER)
+    pats = (
+        bench_patterns.run(n_triples=30_000, n_preds=16, n_queries=20)
+        if args.fast
+        else bench_patterns.run()
+    )
+    for k, (a, b) in pats.items():
+        print(bench_patterns.format_row(k, a, b))
+    results["patterns"] = {
+        k: {"k2_ms": a, "vertical_ms": (None if b != b else b)}
+        for k, (a, b) in pats.items()
+    }
 
+    print("# Pruned unbounded-?P (k2-triples+ SP/OP index) vs all-preds sweep")
+    prows, pinfo = (
+        bench_patterns.run_pruned(n_triples=20_000, n_queries=32)
+        if args.fast
+        else bench_patterns.run_pruned()
+    )
+    print(bench_patterns.format_pruned_info(pinfo))
+    print(bench_patterns.PRUNED_CSV_HEADER)
+    for r in prows:
+        print(bench_patterns.format_pruned_row(r))
+    results["patterns_pruned"] = {"info": pinfo, "rows": prows}
 
-def _joins_fast():
-    from benchmarks import bench_joins
-
+    print("=" * 72)
     print("# Table 4 analogue: ms/query by join category x scan backend")
     print("category,ms_per_query")
-    for k, v in bench_joins.run(n_triples=20_000, n_preds=12, n_each=5).items():
+    joins = (
+        bench_joins.run(n_triples=20_000, n_preds=12, n_each=5)
+        if args.fast
+        else bench_joins.run()
+    )
+    for k, v in joins.items():
         print(f"{k},{v:.2f}")
+    results["joins"] = joins
+
+    print("=" * 72)
+    print("# kernel microbenches (cpu ref timings + TPU roofline analytics)")
+    print("kernel,ms,notes")
+    kern = bench_kernels.run()
+    for name, ms, note in kern:
+        print(f"{name},{ms:.3f},{note}")
+    results["kernels"] = [
+        {"kernel": n, "ms": ms, "notes": note} for n, ms, note in kern
+    ]
+
+    print("=" * 72)
+    results["total_s"] = time.time() - t0
+    print(f"# total {results['total_s']:.0f}s")
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(results, fh, indent=2, default=float)
+        print(f"# wrote {args.json}")
 
 
 if __name__ == "__main__":

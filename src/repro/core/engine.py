@@ -3,21 +3,42 @@
 Two layers:
 
   * ``Engine`` — host-side convenience: takes a triple pattern with ``None``
-    for variables, dispatches to the right primitive, returns numpy results.
-    This is the paper's per-query interface (Tables 3/4 are measured on it).
+    for variables, encodes it into the serve IR below, and decodes numpy
+    results.  This is the paper's per-query interface (Tables 3/4 are
+    measured on it); every keyed pattern rides ONE compiled program.
 
   * ``make_serve_step`` / ``make_sharded_serve_step`` — the production path:
-    one compiled program serving a BATCH of bounded-predicate queries
-    (checks + mixed row/col scans) plus optional unbounded-predicate scans.
+    one compiled program serving a BATCH of queries spanning all keyed
+    patterns — checks, mixed row/col scans, AND the unbounded-predicate
+    lanes (the serve IR ops below).
+
+Serve IR: a ``ServeBatch`` lane is ``(op, s, p, o)`` with
+
+    OP_CHECK      (S, P, O)     -> hit flag
+    OP_ROW        (S, P, ?O)    -> object list            (ids/valid/count)
+    OP_COL        (?S, P, O)    -> subject list           (ids/valid/count)
+    OP_S_ANY_O    (S, ?P, O)    -> matching predicates    (ids/valid/count)
+    OP_S_ANY_ANY  (S, ?P, ?O)   -> per-pred object lists  (u_* block)
+    OP_ANY_ANY_O  (?S, ?P, O)   -> per-pred subject lists (u_* block)
+
+The two full-enumeration patterns ((?S,P,?O) pairs and the (?S,?P,?O) dump)
+return pair sets and stay on ``k2forest.range_scan[_all_preds]``.
+
+Unbounded-``?P`` lanes are the paper's conceded worst case.  With a
+``predindex.PredIndex`` (k²-triples+, arXiv:1310.4954) they gather their
+candidate predicate list from the SP/OP index and launch a PRUNED
+``scan_batch_mixed`` of ``u_width`` lanes per query; without one
+(``index=None``) they fall back to the all-preds broadcast sweep
+(``u_width`` must then cover ``n_preds``) — the differential reference.
 
 Distribution (the paper's vertical partitioning lifted to the mesh):
 the forest arena is sharded by predicate over the ``model`` axis; the query
-batch is sharded over ``data`` (× ``pod``).  Inside ``shard_map`` each model
-shard resolves the queries whose predicate it owns (others masked out) and a
-``psum`` over the model axis combines — invalid lanes carry zeros, exactly
-one shard owns each predicate.  Unbounded-``?P`` scans become the
-embarrassingly-parallel local scan + ``all_gather`` the paper's analysis
-begs for: the model axis attacks vertical partitioning's worst case.
+batch is sharded over ``data`` (× ``pod``); the (tiny) predicate index is
+replicated.  Inside ``shard_map`` each model shard resolves the queries —
+and the candidate predicates — it owns (others masked out) and a ``psum``
+over the model axis combines.  The pruned unbounded path reduces
+``[B, u_width, cap]`` instead of all-gathering ``[B, P, cap]``: predicate
+pruning shrinks the wire bytes by the same factor as the compute.
 """
 
 from __future__ import annotations
@@ -32,65 +53,189 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
-from repro.core import joins, k2forest, patterns
+from repro.core import joins, k2forest, patterns, predindex
 from repro.core.k2forest import K2Forest
+from repro.core.k2tree import _compact
 from repro.core.k2triples import K2TriplesStore
 from repro.core.k2tree import K2Meta
+from repro.core.predindex import PredIndex, PredIndexMeta
 
-# serve ops
+# serve IR ops
 OP_CHECK = 0  # (S, P, O)    -> hit flag
 OP_ROW = 1  # (S, P, ?O)   -> object list
 OP_COL = 2  # (?S, P, O)   -> subject list
+OP_S_ANY_ANY = 3  # (S, ?P, ?O)  -> per-candidate-predicate object lists
+OP_ANY_ANY_O = 4  # (?S, ?P, O)  -> per-candidate-predicate subject lists
+OP_S_ANY_O = 5  # (S, ?P, O)   -> matching predicate list
 
 
 class ServeBatch(NamedTuple):
-    """Encoded bounded-predicate queries (1-based ids)."""
+    """Encoded queries (1-based ids; 0 for positions an op leaves free)."""
 
-    op: jax.Array  # int32[B] in {OP_CHECK, OP_ROW, OP_COL}
+    op: jax.Array  # int32[B] in the serve IR ops above
     s: jax.Array  # int32[B] subject id (or 0)
-    p: jax.Array  # int32[B] predicate id
+    p: jax.Array  # int32[B] predicate id (0 for unbounded-?P ops)
     o: jax.Array  # int32[B] object id (or 0)
 
 
 class ServeResult(NamedTuple):
     hit: jax.Array  # bool[B]      — checks
-    ids: jax.Array  # int32[B,cap] — scans (1-based; 0 where invalid)
+    ids: jax.Array  # int32[B,cap] — scans + S?PO predicate lists (1-based)
     valid: jax.Array  # bool[B,cap]
     count: jax.Array  # int32[B]
     overflow: jax.Array  # bool[B]
+    # unbounded-?P pair ops (OP_S_ANY_ANY / OP_ANY_ANY_O); width-0 when the
+    # serve step was built without unbounded support
+    u_preds: jax.Array  # int32[B,L] candidate predicate ids (1-based; 0 dead)
+    u_ids: jax.Array  # int32[B,L,cap] per-candidate results (1-based)
+    u_valid: jax.Array  # bool[B,L,cap]
+    u_count: jax.Array  # int32[B,L]
+
+
+def _u_candidates(
+    q: ServeBatch, f: K2Forest, u_width: int,
+    index: PredIndex | None, pmeta: PredIndexMeta | None,
+    backend: str | None,
+):
+    """Candidate predicate lists for the unbounded lanes of a batch.
+
+    Returns ``(is_u_pair, is_u_check, u_key, u_axis, cpreds, cvalid,
+    ctrunc)``: 0-based candidates in ``cpreds[B, u_width]`` — from the SP/OP
+    index when given (S?PO gathers SP; an optimizer may pre-swap s/o-keyed
+    lanes), else the all-preds fallback sweep (requires u_width >= P).
+    """
+    is_u_pair = (q.op == OP_S_ANY_ANY) | (q.op == OP_ANY_ANY_O)
+    is_u_check = q.op == OP_S_ANY_O
+    is_u = is_u_pair | is_u_check
+    u_axis = jnp.where(q.op == OP_ANY_ANY_O, 1, 0).astype(jnp.int32)
+    u_key = jnp.maximum(jnp.where(u_axis == 1, q.o, q.s) - 1, 0)
+    u_key = jnp.where(is_u, u_key, 0)
+    b = q.op.shape[0]
+    if index is not None:
+        rows = jnp.where(u_axis == 1, pmeta.n_subjects + u_key, u_key)
+        g = predindex.gather_batch(
+            pmeta, index, jnp.where(is_u, rows, 0), u_width, backend
+        )
+        cpreds, cvalid, ctrunc = g.ids, g.valid, g.overflow
+    else:
+        if u_width < f.n_preds:
+            raise ValueError(
+                f"all-preds fallback needs u_width >= n_preds "
+                f"({u_width} < {f.n_preds}); pass an index to prune"
+            )
+        lane = jnp.arange(u_width, dtype=jnp.int32)
+        cpreds = jnp.broadcast_to(lane, (b, u_width))
+        cvalid = jnp.broadcast_to(lane < f.n_preds, (b, u_width))
+        ctrunc = jnp.zeros((b,), jnp.bool_)
+    cvalid = cvalid & is_u[:, None]
+    return is_u_pair, is_u_check, u_key, u_axis, cpreds, cvalid, ctrunc
 
 
 def _serve_local(
     meta: K2Meta, f: K2Forest, q: ServeBatch, cap: int,
-    backend: str | None = None,
+    backend: str | None = None, *,
+    index: PredIndex | None = None, pmeta: PredIndexMeta | None = None,
+    u_width: int = 0,
 ) -> ServeResult:
     """Resolve a batch against a (possibly local-shard) forest.
 
     ``backend`` selects the scan substrate ("pallas" kernel / "jnp"
     traversal; None = the ``REPRO_SCAN_BACKEND`` flag in kernels/ops.py).
+    ``u_width`` > 0 enables the unbounded-?P lanes (candidate slots per
+    query); 0 compiles them out entirely.
     """
-    hit = k2forest.check(meta, f, q.p - 1, q.s - 1, q.o - 1) & (q.op == OP_CHECK)
+    b = q.op.shape[0]
+    is_check = q.op == OP_CHECK
+    hit = k2forest.check(
+        meta, f, jnp.maximum(q.p - 1, 0), q.s - 1, q.o - 1
+    ) & is_check
     axes = jnp.where(q.op == OP_COL, 1, 0).astype(jnp.int32)
-    key = jnp.where(q.op == OP_COL, q.o, q.s)
-    r = k2forest.scan_batch_mixed(meta, f, q.p - 1, key - 1, axes, cap, backend)
-    scan_lane = q.op != OP_CHECK
+    key = jnp.maximum(jnp.where(q.op == OP_COL, q.o, q.s) - 1, 0)
+    r = k2forest.scan_batch_mixed(
+        meta, f, jnp.maximum(q.p - 1, 0), key, axes, cap, backend
+    )
+    scan_lane = (q.op == OP_ROW) | (q.op == OP_COL)
     valid = r.valid & scan_lane[:, None]
     ids = jnp.where(valid, r.ids + 1, 0)
+    count = jnp.where(scan_lane, r.count, 0)
+    overflow = r.overflow & scan_lane
+
+    if u_width <= 0:
+        return ServeResult(
+            hit=hit, ids=ids, valid=valid, count=count, overflow=overflow,
+            u_preds=jnp.zeros((b, 0), jnp.int32),
+            u_ids=jnp.zeros((b, 0, cap), jnp.int32),
+            u_valid=jnp.zeros((b, 0, cap), jnp.bool_),
+            u_count=jnp.zeros((b, 0), jnp.int32),
+        )
+
+    is_u_pair, is_u_check, u_key, u_axis, cpreds, cvalid, ctrunc = (
+        _u_candidates(q, f, u_width, index, pmeta, backend)
+    )
+    preds_f = jnp.where(cvalid, cpreds, 0).reshape(b * u_width)
+    keys_f = jnp.repeat(u_key, u_width)
+
+    # pair lanes: one pruned mixed scan replaces the P-way broadcast sweep
+    ru = k2forest.scan_batch_mixed(
+        meta, f, preds_f, keys_f, jnp.repeat(u_axis, u_width), cap, backend
+    )
+    pair_valid = cvalid & is_u_pair[:, None]
+    u_valid = ru.valid.reshape(b, u_width, cap) & pair_valid[:, :, None]
+    u_ids = jnp.where(u_valid, ru.ids.reshape(b, u_width, cap) + 1, 0)
+    u_count = jnp.where(pair_valid, ru.count.reshape(b, u_width), 0)
+    u_preds = jnp.where(pair_valid, cpreds + 1, 0)
+    overflow = overflow | (
+        is_u_pair
+        & ((ru.overflow.reshape(b, u_width) & pair_valid).any(axis=1) | ctrunc)
+    )
+
+    # S?PO lanes: check candidates, compact matching predicate ids into ids.
+    # NOTE this intentionally diverges from predindex.check_pruned_batch
+    # (which compacts into u_width slots and so can never truncate): the
+    # serve IR must fit the shared (B, cap) ids buffer, so matches beyond
+    # cap truncate WITH the overflow bit set — callers (Engine.pattern)
+    # must honor it.  Keep the three gather→check/scan→mask copies (here,
+    # the sharded _local, predindex.*_pruned_batch) in sync when touching
+    # the contract.
+    hitm = k2forest.check(
+        meta, f, preds_f,
+        jnp.repeat(jnp.maximum(q.s - 1, 0), u_width),
+        jnp.repeat(jnp.maximum(q.o - 1, 0), u_width),
+    ).reshape(b, u_width) & cvalid & is_u_check[:, None]
+    valid5, count5, ovf5, (ids5,) = jax.vmap(
+        lambda v, a: _compact(v, cap, a)
+    )(hitm, jnp.where(hitm, cpreds + 1, 0))
+    ids = jnp.where(is_u_check[:, None], ids5, ids)
+    valid = jnp.where(is_u_check[:, None], valid5, valid)
+    count = jnp.where(is_u_check, count5, count)
+    overflow = overflow | (is_u_check & (ovf5 | ctrunc))
+
     return ServeResult(
-        hit=hit,
-        ids=ids,
-        valid=valid,
-        count=jnp.where(scan_lane, r.count, 0),
-        overflow=r.overflow & scan_lane,
+        hit=hit, ids=ids, valid=valid, count=count, overflow=overflow,
+        u_preds=u_preds, u_ids=u_ids, u_valid=u_valid, u_count=u_count,
     )
 
 
-def make_serve_step(meta: K2Meta, cap: int, *, backend: str | None = None):
-    """Single-device jit'd serve program."""
+def make_serve_step(
+    meta: K2Meta, cap: int, *, backend: str | None = None,
+    pmeta: PredIndexMeta | None = None, u_width: int | None = None,
+):
+    """Single-device jit'd serve program.
+
+    ``u_width`` candidate slots per unbounded lane (default:
+    ``pmeta.max_degree`` when an index meta is given, else 0 = unbounded
+    ops compiled out).  Call as ``serve_step(forest, batch[, index])`` —
+    passing ``index=None`` with ``u_width >= n_preds`` runs the all-preds
+    fallback sweep.
+    """
+    if u_width is None:
+        u_width = pmeta.max_degree if pmeta is not None else 0
 
     @jax.jit
-    def serve_step(f: K2Forest, q: ServeBatch) -> ServeResult:
-        return _serve_local(meta, f, q, cap, backend)
+    def serve_step(f: K2Forest, q: ServeBatch, index=None) -> ServeResult:
+        return _serve_local(
+            meta, f, q, cap, backend, index=index, pmeta=pmeta, u_width=u_width
+        )
 
     return serve_step
 
@@ -131,7 +276,9 @@ def pad_preds(f: K2Forest, multiple: int) -> K2Forest:
 
 
 def make_sharded_serve_step(
-    meta: K2Meta, mesh: Mesh, cap: int, *, data_axes=("data",), model_axis="model"
+    meta: K2Meta, mesh: Mesh, cap: int, *, data_axes=("data",),
+    model_axis="model", backend: str | None = None,
+    pmeta: PredIndexMeta | None = None, u_width: int | None = None,
 ):
     """shard_map'd serve program: forest by predicate, queries by batch.
 
@@ -139,7 +286,19 @@ def make_sharded_serve_step(
     global predicate g is owned by shard g // P_loc and resolved there with
     local id g % P_loc; other shards compute a masked (empty) traversal and
     the ``psum`` over the model axis merges.
+
+    With ``pmeta`` (and a replicated ``PredIndex`` third argument) the
+    unbounded IR ops are served too: candidates are gathered identically on
+    every shard, each shard scans only the candidates it owns, and the psum
+    assembles the ``[B, u_width, cap]`` block — the index-pruned counterpart
+    of ``make_sharded_unbounded_scan``'s ``[B, P, cap]`` all-gather.
+    Signature: ``fn(forest, batch)`` without an index, ``fn(forest, batch,
+    index)`` with one.
     """
+    if u_width is None:
+        u_width = pmeta.max_degree if pmeta is not None else 0
+    if u_width > 0 and pmeta is None:
+        raise ValueError("sharded unbounded serve requires a pred index (pmeta)")
     mp = int(np.prod([mesh.shape[a] for a in (model_axis,)]))
 
     dax = data_axes if len(data_axes) > 1 else data_axes[0]
@@ -148,10 +307,12 @@ def make_sharded_serve_step(
     out_spec = ServeResult(
         hit=P(dax), ids=P(dax), valid=P(dax),
         count=P(dax), overflow=P(dax),
+        u_preds=P(dax), u_ids=P(dax), u_valid=P(dax), u_count=P(dax),
     )
 
-    def _local(f_loc: K2Forest, q: ServeBatch) -> ServeResult:
+    def _local(f_loc: K2Forest, q: ServeBatch, index=None) -> ServeResult:
         p_loc = f_loc.t_words.shape[0]  # local predicate count
+        b = q.op.shape[0]
         shard = jax.lax.axis_index(model_axis)
         g = q.p - 1  # 0-based global predicate
         owner = g // p_loc
@@ -160,7 +321,7 @@ def make_sharded_serve_step(
         q_loc = ServeBatch(
             op=jnp.where(mine, q.op, -1), s=q.s, p=lp + 1, o=q.o
         )
-        r = _serve_local(meta, f_loc, q_loc, cap)
+        r = _serve_local(meta, f_loc, q_loc, cap, backend)
         # MINIMAL psum payload: only the id matrix and two bit-vectors go on
         # the wire; `valid` (== ids != 0) and `count` are re-derived locally
         # after the reduce.  This halves the all-reduce bytes vs reducing the
@@ -175,18 +336,90 @@ def make_sharded_serve_step(
             model_axis,
         )
         valid = ids != 0
+        hit = (flags & 1).astype(jnp.bool_)
+        overflow = ((flags >> 1) & 1).astype(jnp.bool_)
+        count = valid.sum(axis=-1).astype(jnp.int32)
+
+        if u_width <= 0:
+            return ServeResult(
+                hit=hit, ids=ids, valid=valid, count=count, overflow=overflow,
+                u_preds=jnp.zeros((b, 0), jnp.int32),
+                u_ids=jnp.zeros((b, 0, cap), jnp.int32),
+                u_valid=jnp.zeros((b, 0, cap), jnp.bool_),
+                u_count=jnp.zeros((b, 0), jnp.int32),
+            )
+
+        # unbounded lanes: candidates gathered replicated (index is
+        # replicated), each shard scans/checks only the candidates it owns
+        is_u_pair, is_u_check, u_key, u_axis, cpreds, cvalid, ctrunc = (
+            _u_candidates(q, f_loc, u_width, index, pmeta, backend)
+        )
+        owner_u = cpreds // p_loc
+        mine_u = cvalid & (owner_u == shard)
+        preds_f = jnp.where(mine_u, cpreds % p_loc, 0).reshape(b * u_width)
+        keys_f = jnp.repeat(u_key, u_width)
+
+        ru = k2forest.scan_batch_mixed(
+            meta, f_loc, preds_f, keys_f, jnp.repeat(u_axis, u_width), cap,
+            backend,
+        )
+        pair_mine = mine_u & is_u_pair[:, None]
+        uv_loc = ru.valid.reshape(b, u_width, cap) & pair_mine[:, :, None]
+        u_ids = jax.lax.psum(
+            jnp.where(uv_loc, ru.ids.reshape(b, u_width, cap) + 1, 0),
+            model_axis,
+        )
+        hitm_loc = k2forest.check(
+            meta, f_loc, preds_f,
+            jnp.repeat(jnp.maximum(q.s - 1, 0), u_width),
+            jnp.repeat(jnp.maximum(q.o - 1, 0), u_width),
+        ).reshape(b, u_width) & mine_u & is_u_check[:, None]
+        # one packed [B, u_width] reduce: check hits (bit 0), per-candidate
+        # counts (needed because a count can legitimately be 0 with no ids)
+        packed = jax.lax.psum(
+            hitm_loc.astype(jnp.int32)
+            + 2 * jnp.where(pair_mine, ru.count.reshape(b, u_width), 0),
+            model_axis,
+        )
+        hitm = (packed & 1) == 1
+        u_count = packed >> 1
+        pair_ovf = jax.lax.psum(
+            (ru.overflow.reshape(b, u_width) & pair_mine)
+            .any(axis=1).astype(jnp.int32),
+            model_axis,
+        ) > 0
+        # replicated post-reduce compute (identical on every shard)
+        u_valid = u_ids != 0
+        u_preds = jnp.where(cvalid & is_u_pair[:, None], cpreds + 1, 0)
+        valid5, count5, ovf5, (ids5,) = jax.vmap(
+            lambda v, a: _compact(v, cap, a)
+        )(hitm, jnp.where(hitm, cpreds + 1, 0))
+        ids = jnp.where(is_u_check[:, None], ids5, ids)
+        valid = jnp.where(is_u_check[:, None], valid5, valid)
+        count = jnp.where(is_u_check, count5, count)
+        overflow = (
+            overflow
+            | (is_u_pair & (pair_ovf | ctrunc))
+            | (is_u_check & (ovf5 | ctrunc))
+        )
         return ServeResult(
-            hit=(flags & 1).astype(jnp.bool_),
-            ids=ids,
-            valid=valid,
-            count=valid.sum(axis=-1).astype(jnp.int32),
-            overflow=((flags >> 1) & 1).astype(jnp.bool_),
+            hit=hit, ids=ids, valid=valid, count=count, overflow=overflow,
+            u_preds=u_preds, u_ids=u_ids, u_valid=u_valid, u_count=u_count,
         )
 
-    fn = shard_map(
-        _local, mesh=mesh, in_specs=(fspec, qspec), out_specs=out_spec,
-        check_vma=False,  # pallas_call has no replication rule (scan kernel)
-    )
+    if u_width > 0:
+        ispec = PredIndex(offsets=P(), words=P())  # replicated
+        fn = shard_map(
+            _local, mesh=mesh, in_specs=(fspec, qspec, ispec),
+            out_specs=out_spec,
+            check_vma=False,  # pallas_call has no replication rule
+        )
+    else:
+        fn = shard_map(
+            lambda f_loc, q: _local(f_loc, q), mesh=mesh,
+            in_specs=(fspec, qspec), out_specs=out_spec,
+            check_vma=False,  # pallas_call has no replication rule (scan kernel)
+        )
     return jax.jit(fn)
 
 
@@ -198,7 +431,9 @@ def make_sharded_unbounded_scan(
     results all-gathered over the model axis -> [B, P_padded, cap].
 
     This is the paper's vertical-partitioning worst case turned into an
-    embarrassingly parallel sweep.  The local sweep is one flat
+    embarrassingly parallel sweep — kept as the index-free fallback and the
+    differential reference for the index-pruned unbounded lanes of
+    ``make_sharded_serve_step``.  The local sweep is one flat
     (b · P_loc)-query ``scan_batch_mixed`` launch, so it follows the
     ``REPRO_SCAN_BACKEND`` flag (Pallas kernel / jnp reference) like the
     bounded-predicate serve path.
@@ -233,16 +468,28 @@ def make_sharded_unbounded_scan(
 
 
 # ---------------------------------------------------------------------------
-# host-side convenience engine (per-query; used by benchmarks/examples)
+# host-side convenience engine (the unified plan→serve pipeline)
 # ---------------------------------------------------------------------------
 
 
 @dataclasses.dataclass
 class Engine:
-    """Paper-facing interface: patterns with None variables + joins A–F."""
+    """Paper-facing interface: patterns with None variables + joins A–F.
+
+    ``pattern`` encodes every keyed pattern into the serve IR and runs it
+    through ONE cached compiled ``serve_step`` — check, row/col scan, and
+    the three unbounded-?P ops all share a program.  Unbounded lanes are
+    index-pruned when the store carries a ``pred_index`` (the default);
+    ``use_pred_index=False`` forces the all-preds fallback sweep.
+    """
 
     store: K2TriplesStore
     cap: int = 4096
+    backend: str | None = None
+    use_pred_index: bool = True
+    _serve_cache: dict = dataclasses.field(
+        default_factory=dict, repr=False, compare=False
+    )
 
     @property
     def meta(self) -> K2Meta:
@@ -252,40 +499,94 @@ class Engine:
     def forest(self) -> K2Forest:
         return self.store.forest
 
+    def _pidx(self):
+        return self.store.pred_index if self.use_pred_index else None
+
+    def _serve(self, unbounded: bool):
+        # cache keyed on the live config so mutating cap/backend/
+        # use_pred_index after a query builds a fresh program; bounded ops
+        # get their own u_width=0 program so a plain check/scan never pays
+        # for the (masked) unbounded block
+        key = (self.cap, self.backend, self.use_pred_index, unbounded)
+        cache = self._serve_cache
+        if key not in cache:
+            bi = self._pidx()
+            if not unbounded:
+                cache[key] = make_serve_step(
+                    self.meta, self.cap, backend=self.backend
+                )
+            elif bi is not None:
+                cache[key] = make_serve_step(
+                    self.meta, self.cap, backend=self.backend, pmeta=bi.meta,
+                    u_width=max(bi.meta.max_degree, 1),
+                )
+            else:
+                cache[key] = make_serve_step(
+                    self.meta, self.cap, backend=self.backend,
+                    u_width=self.store.n_preds,
+                )
+        return cache[key]
+
     def pattern(self, s: int | None, p: int | None, o: int | None):
-        """Resolve one triple pattern; returns numpy (see patterns.py)."""
+        """Resolve one triple pattern; returns numpy (see the op table)."""
         m, f, cap = self.meta, self.forest, self.cap
-        if s and p and o:
-            return bool(patterns.spo(m, f, s, p, o))
-        if s and o:  # (S, ?P, O)
-            return np.nonzero(np.asarray(patterns.s_any_o(m, f, s, o)))[0] + 1
-        if s and p:
-            r = patterns.sp_any(m, f, s, p, cap)
-            return np.asarray(r.ids)[np.asarray(r.valid)]
-        if p and o:
-            r = patterns.any_po(m, f, p, o, cap)
-            return np.asarray(r.ids)[np.asarray(r.valid)]
-        if s:
-            r = patterns.s_any_any(m, f, s, cap)
-            ids, valid = np.asarray(r.ids), np.asarray(r.valid)
-            return {pi + 1: ids[pi][valid[pi]] for pi in range(ids.shape[0]) if valid[pi].any()}
-        if o:
-            r = patterns.any_any_o(m, f, o, cap)
-            ids, valid = np.asarray(r.ids), np.asarray(r.valid)
-            return {pi + 1: ids[pi][valid[pi]] for pi in range(ids.shape[0]) if valid[pi].any()}
-        if p:
-            r = patterns.any_p_any(m, f, p, cap)
+        if p and not s and not o:  # (?S, P, ?O): pair enumeration
+            r = patterns.any_p_any(m, f, p, cap, self.backend)
             v = np.asarray(r.valid)
             return np.stack([np.asarray(r.rows)[v], np.asarray(r.cols)[v]], axis=1)
-        r = patterns.dump(m, f, cap)
-        out = {}
-        for pi in range(self.store.n_preds):
-            v = np.asarray(r.valid[pi])
-            if v.any():
-                out[pi + 1] = np.stack(
-                    [np.asarray(r.rows[pi])[v], np.asarray(r.cols[pi])[v]], axis=1
+        if not s and not p and not o:  # (?S, ?P, ?O): dump
+            r = patterns.dump(m, f, cap, self.backend)
+            out = {}
+            for pi in range(self.store.n_preds):
+                v = np.asarray(r.valid[pi])
+                if v.any():
+                    out[pi + 1] = np.stack(
+                        [np.asarray(r.rows[pi])[v], np.asarray(r.cols[pi])[v]],
+                        axis=1,
+                    )
+            return out
+
+        if s and p and o:
+            op = OP_CHECK
+        elif s and p:
+            op = OP_ROW
+        elif p and o:
+            op = OP_COL
+        elif s and o:
+            op = OP_S_ANY_O
+        elif s:
+            op = OP_S_ANY_ANY
+        else:
+            op = OP_ANY_ANY_O
+        q = ServeBatch(
+            op=jnp.asarray([op], jnp.int32),
+            s=jnp.asarray([s or 0], jnp.int32),
+            p=jnp.asarray([p or 0], jnp.int32),
+            o=jnp.asarray([o or 0], jnp.int32),
+        )
+        unbounded = op in (OP_S_ANY_O, OP_S_ANY_ANY, OP_ANY_ANY_O)
+        bi = self._pidx()
+        r = self._serve(unbounded)(
+            f, q, bi.device if (unbounded and bi is not None) else None
+        )
+        if op == OP_CHECK:
+            return bool(np.asarray(r.hit)[0])
+        if op in (OP_ROW, OP_COL, OP_S_ANY_O):
+            if op == OP_S_ANY_O and bool(np.asarray(r.overflow)[0]):
+                # the legacy bool[P] path was exact at any cap; never
+                # silently hand back a truncated predicate list
+                raise RuntimeError(
+                    "(S,?P,O) matches exceed cap; raise Engine.cap"
                 )
-        return out
+            return np.asarray(r.ids)[0][np.asarray(r.valid)[0]]
+        u_preds = np.asarray(r.u_preds)[0]
+        u_ids = np.asarray(r.u_ids)[0]
+        u_valid = np.asarray(r.u_valid)[0]
+        return {
+            int(u_preds[l]): u_ids[l][u_valid[l]]
+            for l in range(u_preds.shape[0])
+            if u_preds[l] and u_valid[l].any()
+        }
 
     # joins ------------------------------------------------------------
     def join(self, category: str, **kw):

@@ -14,6 +14,16 @@ Pattern -> primitive map (paper §k²-triples):
   (?S, ?P, O)   column scan on every tree              -> ``any_any_o``
   (?S, P, ?O)   full range scan of one tree            -> ``any_p_any``
   (?S, ?P, ?O)  range scan on every tree (dump)        -> ``dump``
+
+The three unbounded-``?P`` entries (``s_any_o`` / ``s_any_any`` /
+``any_any_o``) additionally accept a k²-triples+ SP/OP predicate index
+(``index=`` + ``pmeta=``, see ``core/predindex.py``): candidates are then
+gathered from the index and only those trees are touched — the pruned
+layout (``s_any_any`` / ``any_any_o`` return a ``PredScanResult`` whose
+axis 0 is the CANDIDATE slot, with ``preds`` naming each slot's predicate;
+``s_any_o`` returns the matching predicates as a ``QueryResult`` list).
+Without an index the all-preds sweep runs (the differential reference):
+per-predicate layouts with axis 0 = predicate, exactly the paper's shapes.
 """
 
 from __future__ import annotations
@@ -21,9 +31,10 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import k2forest
+from repro.core import k2forest, predindex
 from repro.core.k2forest import K2Forest
 from repro.core.k2tree import K2Meta, PairResult, QueryResult
+from repro.core.predindex import PredScanResult
 
 
 def _ids(res: QueryResult) -> QueryResult:
@@ -44,10 +55,23 @@ def spo(meta: K2Meta, f: K2Forest, s, p, o) -> jax.Array:
     return k2forest.check(meta, f, p - 1, s - 1, o - 1)
 
 
-def s_any_o(meta: K2Meta, f: K2Forest, s, o) -> jax.Array:
-    """(S, ?P, O) -> bool[P]; index i <-> predicate i+1."""
+def s_any_o(meta: K2Meta, f: K2Forest, s, o, backend: str | None = None,
+            *, index=None, pmeta=None, u_width: int | None = None):
+    """(S, ?P, O) -> bool[P]; index i <-> predicate i+1.
+
+    With ``index``: only the subject's SP candidates are checked and the
+    MATCHING predicate ids (1-based, ascending) come back as a
+    ``QueryResult`` — same information, pruned layout.
+    """
     s, o = jnp.asarray(s, jnp.int32), jnp.asarray(o, jnp.int32)
-    return k2forest.check_all_preds(meta, f, s - 1, o - 1)
+    if index is None:
+        return k2forest.check_all_preds(meta, f, s - 1, o - 1)
+    r = predindex.check_pruned_batch(
+        meta, f, pmeta, index, jnp.reshape(s - 1, (1,)),
+        jnp.reshape(o - 1, (1,)), u_width or max(pmeta.max_degree, 1), backend,
+    )
+    r = jax.tree.map(lambda x: x[0], r)
+    return _ids(r)
 
 
 def sp_any(meta: K2Meta, f: K2Forest, s, p, cap: int,
@@ -57,11 +81,34 @@ def sp_any(meta: K2Meta, f: K2Forest, s, p, cap: int,
     return _ids(k2forest.row_scan(meta, f, p - 1, s - 1, cap, backend))
 
 
+def _pruned_one(meta, f, pmeta, index, key, axis: int, cap: int,
+                u_width: int | None, backend) -> PredScanResult:
+    """Single-query pruned unbounded scan, shifted to 1-based ids."""
+    r = predindex.scan_pruned_batch(
+        meta, f, pmeta, index, jnp.reshape(key, (1,)),
+        jnp.full((1,), axis, jnp.int32), cap,
+        u_width or max(pmeta.max_degree, 1), backend,
+    )
+    r = jax.tree.map(lambda x: x[0], r)
+    return r._replace(
+        preds=jnp.where(r.pvalid, r.preds + 1, 0),
+        ids=jnp.where(r.valid, r.ids + 1, 0),
+    )
+
+
 def s_any_any(meta: K2Meta, f: K2Forest, s, cap: int,
-              backend: str | None = None) -> QueryResult:
-    """(S, ?P, ?O) -> per-predicate object lists (axis 0 = predicate)."""
+              backend: str | None = None, *, index=None, pmeta=None,
+              u_width: int | None = None):
+    """(S, ?P, ?O) -> per-predicate object lists (axis 0 = predicate).
+
+    With ``index``: axis 0 becomes the CANDIDATE slot of a
+    ``PredScanResult`` (``preds[l]`` names slot l's predicate) — only the
+    subject's SP candidates are scanned.
+    """
     s = jnp.asarray(s, jnp.int32)
-    return _ids(k2forest.row_scan_all_preds(meta, f, s - 1, cap, backend))
+    if index is None:
+        return _ids(k2forest.row_scan_all_preds(meta, f, s - 1, cap, backend))
+    return _pruned_one(meta, f, pmeta, index, s - 1, 0, cap, u_width, backend)
 
 
 def any_po(meta: K2Meta, f: K2Forest, p, o, cap: int,
@@ -72,10 +119,17 @@ def any_po(meta: K2Meta, f: K2Forest, p, o, cap: int,
 
 
 def any_any_o(meta: K2Meta, f: K2Forest, o, cap: int,
-              backend: str | None = None) -> QueryResult:
-    """(?S, ?P, O) -> per-predicate subject lists."""
+              backend: str | None = None, *, index=None, pmeta=None,
+              u_width: int | None = None):
+    """(?S, ?P, O) -> per-predicate subject lists.
+
+    With ``index``: pruned to the object's OP candidates (see
+    ``s_any_any``).
+    """
     o = jnp.asarray(o, jnp.int32)
-    return _ids(k2forest.col_scan_all_preds(meta, f, o - 1, cap, backend))
+    if index is None:
+        return _ids(k2forest.col_scan_all_preds(meta, f, o - 1, cap, backend))
+    return _pruned_one(meta, f, pmeta, index, o - 1, 1, cap, u_width, backend)
 
 
 def any_p_any(meta: K2Meta, f: K2Forest, p, cap: int,

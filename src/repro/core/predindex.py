@@ -1,0 +1,328 @@
+"""Compressed SP/OP predicate indexes — the k²-triples+ subsystem.
+
+The paper concedes that vertical partitioning's worst case is the
+unbounded-predicate pattern: resolving ``(S,?P,?O)`` / ``(?S,?P,O)`` /
+``(S,?P,O)`` means touching **all** |P| trees.  The follow-up work
+*Compressed Vertical Partitioning for Full-In-Memory RDF Management*
+(arXiv:1310.4954) fixes this with two compact indexes:
+
+  * **SP** — for every subject s, the sorted list of predicates p such that
+    some triple (s, p, ·) exists;
+  * **OP** — for every object o, the sorted list of predicates p such that
+    some triple (·, p, o) exists.
+
+An unbounded-``?P`` query then scans only the candidate predicates named by
+the index instead of sweeping the whole forest — predicate pruning, which
+arXiv:2002.11622 confirms as the decisive optimization for this layout.
+
+Layout (device, jit-able): both indexes share ONE CSR arena so a mixed batch
+of subject- and object-keyed queries needs a single gather program —
+
+  * ``offsets``  int32[|S| + |O| + 1] — row r of subject s is ``s-1``, row of
+    object o is ``|S| + o - 1`` (1-based dictionary ids);
+  * ``words``    uint32[W] — the concatenated predicate lists, byte-packed at
+    ``bytes_per_pred`` ∈ {1, 2, 4} bytes per entry (the fixed-width special
+    case of the paper's byte-aligned DACs: every predicate id fits one
+    chunk, so direct access is a shift+mask instead of a bitmap rank).
+
+Size accounting is honest on two axes (``PredIndexStats``): the bits the
+device arena actually costs (payload + 32-bit offsets), and the analytic
+multi-level DAC(b=8) size of the gap-encoded lists — the number a
+1310.4954-style host implementation would report (its Table analogue in
+``benchmarks/bench_compression.py``).
+
+The batched query ops at the bottom (``gather_batch``, ``scan_pruned_batch``,
+``check_pruned_batch``) are the substrate of the engine's unbounded serve
+lanes and the optimizer's bound-``?P`` resolves.  ``gather_batch`` routes
+through the ``kernels/pred_gather`` Pallas kernel or its jnp mirror exactly
+like ``k2forest.scan_batch_mixed`` routes (``REPRO_SCAN_BACKEND`` /
+per-call ``backend=``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import k2forest
+from repro.core.k2forest import K2Forest
+from repro.core.k2tree import K2Meta, QueryResult, _compact
+
+
+class PredIndex(NamedTuple):
+    """Device arrays (a pytree; shards replicated next to the forest)."""
+
+    offsets: jax.Array  # int32[R + 1], R = n_subjects + n_objects
+    words: jax.Array  # uint32[W] byte-packed 0-based predicate ids
+
+
+@dataclasses.dataclass(frozen=True)
+class PredIndexMeta:
+    """Static (hashable) geometry — travels like ``K2Meta``."""
+
+    n_subjects: int
+    n_objects: int
+    n_preds: int
+    bytes_per_pred: int  # 1, 2 or 4 (word-aligned: an entry never straddles)
+    max_degree: int  # max list length over all subjects and objects
+    # per-axis maxima: a hub object (e.g. a class object touching ~all P
+    # predicates) inflates max_degree and with it any u_width sized from
+    # it; callers serving subject-keyed batches can size from the SP side
+    # alone (and rely on the `truncated` overflow bit otherwise)
+    max_sp_degree: int = 0
+    max_op_degree: int = 0
+
+
+class PredIndexStats(NamedTuple):
+    """Honest size accounting (the 1310.4954 Table analogue)."""
+
+    sp_entries: int  # Σ_s |SP(s)|  (== #distinct (s,p) pairs)
+    op_entries: int  # Σ_o |OP(o)|
+    payload_bits: int  # byte-packed payload as materialized on device
+    offsets_bits: int  # the int32 CSR row pointers we actually keep
+    dac_bits: int  # analytic DAC(b=8) of the gap-encoded lists
+    bits_per_triple: float  # (payload + offsets) / n_triples
+
+
+@dataclasses.dataclass(frozen=True)
+class BuiltPredIndex:
+    """Everything ``K2TriplesStore`` carries: device + static + host views."""
+
+    device: PredIndex
+    meta: PredIndexMeta
+    stats: PredIndexStats
+    host_offsets: np.ndarray  # int64[R + 1]
+    host_preds: np.ndarray  # int32[total] 0-based, sorted within each row
+
+    def host_list(self, row: int) -> np.ndarray:
+        """0-based predicate list of one entity row (subjects then objects)."""
+        return self.host_preds[self.host_offsets[row] : self.host_offsets[row + 1]]
+
+
+def subject_row(s):
+    """Entity row of 1-based subject id ``s`` (plain arithmetic, jit-safe)."""
+    return s - 1
+
+
+def object_row(pmeta: PredIndexMeta, o):
+    """Entity row of 1-based object id ``o``."""
+    return pmeta.n_subjects + o - 1
+
+
+# ---------------------------------------------------------------------------
+# construction (numpy, host)
+# ---------------------------------------------------------------------------
+
+
+def _dac_bits(values: np.ndarray, chunk: int = 8) -> int:
+    """Analytic multi-level DAC size: ``chunk``-bit chunks + 1 flag bit each."""
+    if values.size == 0:
+        return 0
+    v = values.astype(np.int64)
+    nbits = np.maximum(1, np.floor(np.log2(np.maximum(v, 1))) + 1)
+    nchunks = np.ceil(nbits / chunk)
+    return int(nchunks.sum() * (chunk + 1))
+
+
+def build(
+    ids: np.ndarray, *, n_subjects: int, n_objects: int, n_preds: int,
+    n_triples: int | None = None,
+) -> BuiltPredIndex:
+    """Build SP+OP from int64[N,3] 1-based (s, p, o) ID triples."""
+    ids = np.asarray(ids, dtype=np.int64).reshape(-1, 3)
+    n_triples = int(ids.shape[0]) if n_triples is None else n_triples
+    sp = np.unique(ids[:, [0, 1]], axis=0)  # sorted (s, p): lists come sorted
+    op = np.unique(ids[:, [2, 1]], axis=0)
+
+    R = n_subjects + n_objects
+    counts = np.zeros(R, np.int64)
+    np.add.at(counts, sp[:, 0] - 1, 1)
+    np.add.at(counts, n_subjects + op[:, 0] - 1, 1)
+    offsets = np.zeros(R + 1, np.int64)
+    np.cumsum(counts, out=offsets[1:])
+
+    preds = np.zeros(max(int(offsets[-1]), 1), np.int32)
+    # np.unique's lexsort already groups rows by entity with ascending preds,
+    # so the payload is one concatenation per index half
+    preds[: sp.shape[0]] = sp[:, 1] - 1
+    op_base = int(offsets[n_subjects])
+    preds[op_base : op_base + op.shape[0]] = op[:, 1] - 1
+
+    bpp = 1 if n_preds <= 0xFF else (2 if n_preds <= 0xFFFF else 4)
+    per_word = 4 // bpp
+    n_entries = int(offsets[-1])
+    padded = np.zeros(((max(n_entries, 1) + per_word - 1) // per_word) * per_word,
+                      np.uint32)
+    padded[:n_entries] = preds[:n_entries].astype(np.uint32)
+    lanes = padded.reshape(-1, per_word)
+    shifts = (np.arange(per_word, dtype=np.uint64) * 8 * bpp)
+    words = np.bitwise_or.reduce(
+        (lanes.astype(np.uint64) << shifts[None, :]), axis=1
+    ).astype(np.uint32)
+
+    max_degree = int(counts.max()) if R else 0
+    max_sp = int(counts[:n_subjects].max()) if n_subjects else 0
+    max_op = int(counts[n_subjects:].max()) if n_objects else 0
+    # gap-encode each list for the DAC analogue: first entry +1, then deltas
+    gaps = preds[:n_entries].astype(np.int64) + 1
+    if n_entries:
+        starts = offsets[:-1][counts > 0]
+        inner = np.ones(n_entries, np.bool_)
+        inner[starts] = False
+        gaps[inner] = np.diff(preds[:n_entries].astype(np.int64))[inner[1:]]
+    stats = PredIndexStats(
+        sp_entries=int(sp.shape[0]),
+        op_entries=int(op.shape[0]),
+        payload_bits=int(words.size * 32),
+        offsets_bits=int((R + 1) * 32),
+        dac_bits=_dac_bits(gaps),
+        bits_per_triple=float(words.size * 32 + (R + 1) * 32) / max(n_triples, 1),
+    )
+    return BuiltPredIndex(
+        device=PredIndex(
+            offsets=jnp.asarray(offsets, jnp.int32), words=jnp.asarray(words)
+        ),
+        meta=PredIndexMeta(
+            n_subjects=n_subjects, n_objects=n_objects, n_preds=n_preds,
+            bytes_per_pred=bpp, max_degree=max_degree,
+            max_sp_degree=max_sp, max_op_degree=max_op,
+        ),
+        stats=stats,
+        host_offsets=offsets,
+        host_preds=preds[:n_entries],
+    )
+
+
+# ---------------------------------------------------------------------------
+# device queries
+# ---------------------------------------------------------------------------
+
+
+def payload_at(words: jax.Array, elem: jax.Array, bytes_per_pred: int) -> jax.Array:
+    """Direct access: the ``elem``-th packed entry -> 0-based predicate id."""
+    bidx = elem * bytes_per_pred
+    word = words[jnp.clip(bidx >> 2, 0, words.shape[0] - 1)]
+    shift = ((bidx & 3) * 8).astype(jnp.uint32)
+    mask = jnp.uint32((1 << (8 * bytes_per_pred)) - 1 if bytes_per_pred < 4
+                      else 0xFFFFFFFF)
+    return ((word >> shift) & mask).astype(jnp.int32)
+
+
+def _gather_traced(
+    pmeta: PredIndexMeta, index: PredIndex, rows: jax.Array, cap: int
+) -> QueryResult:
+    """jnp reference gather: rows int32[B] (0-based entity rows) -> the
+    ``QueryResult`` contract over 0-based predicate ids (prefix-valid,
+    dead lanes zeroed, overflow = list longer than ``cap``).
+
+    The math is ``ref.pred_gather_ref`` — one jnp source of truth; the
+    Pallas kernel is the independent implementation checked against it.
+    """
+    from repro.kernels import ref  # deferred: core must import without pallas
+
+    rows = jnp.clip(jnp.asarray(rows, jnp.int32), 0,
+                    pmeta.n_subjects + pmeta.n_objects - 1)
+    ids, valid, count, overflow = ref.pred_gather_ref(
+        rows, index.offsets, index.words,
+        bytes_per_pred=pmeta.bytes_per_pred, cap=cap,
+    )
+    return QueryResult(ids=ids, valid=valid, count=count, overflow=overflow)
+
+
+def gather_batch(
+    pmeta: PredIndexMeta, index: PredIndex, rows, cap: int,
+    backend: str | None = None,
+) -> QueryResult:
+    """Batched candidate-predicate gather (the ragged-gather launch layout).
+
+    ``backend`` routes exactly like ``k2forest.scan_batch_mixed``: "pallas"
+    runs the ``kernels.pred_gather`` kernel, "jnp" the reference above; None
+    defers to ``REPRO_SCAN_BACKEND``.  Bit-identical outputs
+    (tests/test_pred_gather.py).
+    """
+    from repro.kernels import ops  # deferred: core must import without pallas
+
+    rows = jnp.asarray(rows, jnp.int32)
+    if ops.scan_backend(backend) == "pallas":
+        ids, valid, count, overflow = ops.pred_gather_index(
+            pmeta, index, rows, cap=cap
+        )
+        return QueryResult(ids=ids, valid=valid, count=count, overflow=overflow)
+    return _gather_traced(pmeta, index, rows, cap)
+
+
+class PredScanResult(NamedTuple):
+    """Pruned unbounded scan: per-candidate-predicate result lists.
+
+    All ids 0-based (the ``k2forest`` convention; the patterns layer shifts).
+    ``u_width`` candidate slots per query; ``pvalid`` marks live candidates.
+    """
+
+    preds: jax.Array  # int32[..., L] candidate predicate ids (0 where dead)
+    pvalid: jax.Array  # bool[..., L]
+    ids: jax.Array  # int32[..., L, cap]
+    valid: jax.Array  # bool[..., L, cap]
+    count: jax.Array  # int32[..., L]
+    overflow: jax.Array  # bool[..., L] per-candidate scan overflow
+    truncated: jax.Array  # bool[...] candidate list exceeded L (never when
+    #   L >= pmeta.max_degree)
+
+
+def scan_pruned_batch(
+    meta: K2Meta, f: K2Forest, pmeta: PredIndexMeta, index: PredIndex,
+    keys, axes, cap: int, u_width: int, backend: str | None = None,
+) -> PredScanResult:
+    """(S,?P,?O) / (?S,?P,O) batch via the index: scan candidates only.
+
+    ``keys`` int32[B] 0-based subject (axes==0) or object (axes==1) ids;
+    one flat ``scan_batch_mixed`` launch of B·u_width lanes replaces the
+    B·P broadcast sweep.
+    """
+    keys = jnp.asarray(keys, jnp.int32)
+    axes = jnp.asarray(axes, jnp.int32)
+    b = keys.shape[0]
+    rows = jnp.where(axes == 1, pmeta.n_subjects + keys, keys)
+    g = gather_batch(pmeta, index, rows, u_width, backend)
+    preds_f = jnp.where(g.valid, g.ids, 0).reshape(b * u_width)
+    keys_f = jnp.repeat(keys, u_width)
+    axes_f = jnp.repeat(axes, u_width)
+    r = k2forest.scan_batch_mixed(meta, f, preds_f, keys_f, axes_f, cap, backend)
+    valid = r.valid.reshape(b, u_width, cap) & g.valid[:, :, None]
+    return PredScanResult(
+        preds=jnp.where(g.valid, g.ids, 0),
+        pvalid=g.valid,
+        ids=jnp.where(valid, r.ids.reshape(b, u_width, cap), 0),
+        valid=valid,
+        count=jnp.where(g.valid, r.count.reshape(b, u_width), 0),
+        overflow=r.overflow.reshape(b, u_width) & g.valid,
+        truncated=g.overflow,
+    )
+
+
+def check_pruned_batch(
+    meta: K2Meta, f: K2Forest, pmeta: PredIndexMeta, index: PredIndex,
+    rows, cols, u_width: int, backend: str | None = None,
+) -> QueryResult:
+    """(S,?P,O) batch via the SP index: check candidates only.
+
+    ``rows``/``cols`` int32[B] 0-based subject/object ids.  Returns the
+    matching predicate ids (0-based, ascending, compacted to the front of
+    ``u_width`` slots); ``overflow`` latches only if the candidate list
+    itself was truncated.
+    """
+    rows = jnp.asarray(rows, jnp.int32)
+    cols = jnp.asarray(cols, jnp.int32)
+    b = rows.shape[0]
+    g = gather_batch(pmeta, index, rows, u_width, backend)
+    preds_f = jnp.where(g.valid, g.ids, 0).reshape(b * u_width)
+    hit = k2forest.check(
+        meta, f, preds_f, jnp.repeat(rows, u_width), jnp.repeat(cols, u_width)
+    ).reshape(b, u_width) & g.valid
+    valid, count, _, (ids,) = jax.vmap(
+        lambda v, a: _compact(v, u_width, a)
+    )(hit, jnp.where(hit, g.ids, 0))
+    return QueryResult(ids=ids, valid=valid, count=count, overflow=g.overflow)

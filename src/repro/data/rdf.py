@@ -51,12 +51,19 @@ def generate(
     so_frac: float = 0.3,
     pred_alpha: float = 1.2,
     obj_alpha: float = 1.05,
+    preds_per_subject: int | None = None,
     seed: int = 0,
 ) -> RdfDataset:
     """Power-law synthetic RDF in the paper's 4-range ID space.
 
     so_frac: fraction of the smaller of (|S|,|O|) that plays both roles —
     real datasets have few but nonzero SO terms (Fernández et al. 2010).
+
+    preds_per_subject: skewed predicate usage — every subject draws its
+    predicates from an own small pool of at most this many (pool sizes
+    1..preds_per_subject, uniform).  Real corpora behave this way (a
+    resource's class fixes its predicate vocabulary; arXiv:1310.4954's
+    SP-index premise): |P| is large but each subject touches a handful.
     """
     rng = np.random.default_rng(seed)
     n_so = int(so_frac * min(n_subjects, n_objects))
@@ -68,7 +75,16 @@ def generate(
         return lo + np.clip(ranks, 0, span - 1)
 
     s = powerlaw_ids(n_triples, 1, n_subjects, 1.0)  # subjects ~uniform-ish
-    p = powerlaw_ids(n_triples, 1, n_preds, pred_alpha)
+    if preds_per_subject is None:
+        p = powerlaw_ids(n_triples, 1, n_preds, pred_alpha)
+    else:
+        # per-subject predicate pool: pool of subject i is a contiguous slice
+        # of a global random permutation, offset by a per-subject start
+        perm = rng.permutation(n_preds).astype(np.int64)
+        pool_size = rng.integers(1, preds_per_subject + 1, n_subjects + 1)
+        pool_start = rng.integers(0, n_preds, n_subjects + 1)
+        slot = rng.integers(0, 1 << 30, n_triples) % pool_size[s]
+        p = 1 + perm[(pool_start[s] + slot) % n_preds]
     o = powerlaw_ids(n_triples, 1, n_objects, obj_alpha)
     # real RDF clusters: a subject's objects are nearby in dictionary order
     # (Fernández et al. 2010) — k²-trees exploit exactly this.  Mix 60%

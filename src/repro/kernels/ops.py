@@ -3,9 +3,11 @@
 Environment flags:
 
 ``REPRO_PALLAS_INTERPRET``
-    (read once at import) "1" (default off-TPU) flips every Pallas kernel
-    into interpret mode — the CPU correctness path used by this container
-    (TPU is the compile target).  On a real TPU backend set
+    (re-read on every entry-point call — same semantics as the scan-backend
+    flag below; a function already jit-compiled keeps the mode baked in at
+    trace time) "1" (default off-TPU) flips every Pallas kernel into
+    interpret mode — the CPU correctness path used by this container (TPU
+    is the compile target).  On a real TPU backend set
     ``REPRO_PALLAS_INTERPRET=0`` (the default there: interpret only engages
     when the backend is not TPU).
 
@@ -16,8 +18,10 @@ Environment flags:
     at trace time) Selects the traversal substrate behind
     ``core.k2forest`` batch scans — ``scan_batch_mixed`` (the
     (S,P,?O)/(?S,P,O) serve hot path + all-preds sweeps),
-    ``range_scan_batch`` ((?S,P,?O) pair enumeration), and
-    ``scan_rebind_batch`` (join categories D–F):
+    ``range_scan_batch`` ((?S,P,?O) pair enumeration),
+    ``scan_rebind_batch`` (join categories D–F), and
+    ``core.predindex.gather_batch`` (the SP/OP candidate gather feeding
+    the index-pruned unbounded-?P lanes):
 
       * ``"pallas"`` (default) — the batched kernels (``kernels/k2_scan.py``
         / ``kernels/k2_range.py``): whole-arena VMEM residency, one grid
@@ -41,13 +45,25 @@ from repro.kernels import k2_check as _kc
 from repro.kernels import k2_range as _kr
 from repro.kernels import k2_scan as _ks
 from repro.kernels import popcount as _pc
+from repro.kernels import pred_gather as _pg
 from repro.kernels import sorted_intersect as _si
 
-INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0" and (
-    jax.default_backend() != "tpu"
-)
-
 DEFAULT_SCAN_BACKEND = "pallas"
+
+
+def pallas_interpret(override: bool | None = None) -> bool:
+    """Resolve interpret mode for every Pallas launch.
+
+    Re-reads ``REPRO_PALLAS_INTERPRET`` from the environment on every call —
+    the same no-latching contract as ``scan_backend()`` (the original code
+    captured it once into a module constant, so flipping the var after
+    import was silently ignored; tests/test_backend_flag.py).
+    """
+    if override is not None:
+        return override
+    return os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0" and (
+        jax.default_backend() != "tpu"
+    )
 
 
 def scan_backend(override: str | None = None) -> str:
@@ -64,7 +80,7 @@ def scan_backend(override: str | None = None) -> str:
 
 
 def popcount(words: jax.Array, *, block_m: int = 8) -> jax.Array:
-    return _pc.popcount_2d(words, block_m=block_m, interpret=INTERPRET)
+    return _pc.popcount_2d(words, block_m=block_m, interpret=pallas_interpret())
 
 
 def k2_check_tree(
@@ -78,7 +94,7 @@ def k2_check_tree(
         cols = jnp.pad(cols, (0, pad))
     out = _kc.k2_check(
         meta, rows, cols, tree.t.words, tree.t.rank_blocks, tree.l.words,
-        tree.ones_before, tree.level_start, block_q=block_q, interpret=INTERPRET,
+        tree.ones_before, tree.level_start, block_q=block_q, interpret=pallas_interpret(),
     )
     return out[:q]
 
@@ -114,7 +130,7 @@ def k2_scan_forest(
         meta, preds, keys, axes,
         forest.t_words, forest.t_rank, forest.l_words,
         forest.ones_before, forest.level_start,
-        cap=cap, block_q=bq, interpret=INTERPRET,
+        cap=cap, block_q=bq, interpret=pallas_interpret(),
     )
     return ids[:q], valid[:q], count[:q], overflow[:q]
 
@@ -144,7 +160,7 @@ def k2_range_forest(
         meta, preds,
         forest.t_words, forest.t_rank, forest.l_words,
         forest.ones_before, forest.level_start,
-        cap=cap, block_q=bq, interpret=INTERPRET,
+        cap=cap, block_q=bq, interpret=pallas_interpret(),
     )
     return rows[:q], cols[:q], valid[:q], count[:q], overflow[:q]
 
@@ -180,14 +196,45 @@ def k2_scan_rebind_forest(
         meta, *arrs,
         forest.t_words, forest.t_rank, forest.l_words,
         forest.ones_before, forest.level_start,
-        cap_x=cap_x, cap_y=cap_y, block_q=bq, interpret=INTERPRET,
+        cap_x=cap_x, cap_y=cap_y, block_q=bq, interpret=pallas_interpret(),
     )
     return tuple(a[:q] for a in out)
 
 
+def pred_gather_index(
+    pmeta,
+    index,
+    rows: jax.Array,
+    *,
+    cap: int,
+    block_q: int = 256,
+):
+    """Kernel-backed candidate-predicate gather over a PredIndex.
+
+    Drop-in compute for ``core.predindex.gather_batch`` (which routes here
+    when the scan backend is "pallas").  Rows are clipped to the index range
+    and padded up to a ``block_q`` multiple; padded lanes read row 0 and are
+    sliced off.  Returns (ids, valid, count, overflow).
+    """
+    (q,) = jnp.shape(rows)
+    bq = min(block_q, max(1, q))
+    pad = (-q) % bq
+    rows = jnp.clip(
+        jnp.asarray(rows, jnp.int32), 0, index.offsets.shape[0] - 2
+    )
+    if pad:
+        rows = jnp.pad(rows, (0, pad))
+    ids, valid, count, overflow = _pg.pred_gather(
+        rows, index.offsets, index.words,
+        bytes_per_pred=pmeta.bytes_per_pred, cap=cap, block_q=bq,
+        interpret=pallas_interpret(),
+    )
+    return ids[:q], valid[:q], count[:q], overflow[:q]
+
+
 def sorted_intersect_mask(a_ids: jax.Array, b_ids: jax.Array) -> jax.Array:
-    return _si.sorted_intersect_mask(a_ids, b_ids, interpret=INTERPRET)
+    return _si.sorted_intersect_mask(a_ids, b_ids, interpret=pallas_interpret())
 
 
 def block_spmm(mask: jax.Array, a: jax.Array, x: jax.Array, **kw) -> jax.Array:
-    return _bs.block_spmm(mask, a, x, interpret=INTERPRET, **kw)
+    return _bs.block_spmm(mask, a, x, interpret=pallas_interpret(), **kw)

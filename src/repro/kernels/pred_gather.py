@@ -1,0 +1,99 @@
+"""Pallas TPU kernel: ragged candidate-predicate gather (the SP/OP index read).
+
+The pruned unbounded-``?P`` path (``core/predindex.scan_pruned_batch``) first
+expands every query into its candidate predicate list — a ragged CSR gather
+that this kernel phrases as a fixed-shape ``(BQ, L)`` launch layout: lane
+``(q, j)`` holds the j-th predicate of query q's entity row, ready to feed
+the flat ``(query, pred)`` grid of the batched ``k2_scan`` kernel.
+
+Per grid step (one ``(BQ,)`` block of entity rows) with the whole index
+arena (``offsets`` + byte-packed ``words``) VMEM-resident — the index is a
+few bytes per distinct (s,p)/(o,p) pair, far smaller than the forest:
+
+    start  = offsets[row]            deg = offsets[row + 1] - start
+    elem   = start + j                              (j = 0 .. L-1)
+    word   = words[(elem * bpp) >> 2]               (1-D dynamic gather)
+    pred   = (word >> (8 * ((elem * bpp) & 3))) & ((1 << 8*bpp) - 1)
+
+``bytes_per_pred`` ∈ {1, 2, 4} divides the word size, so an entry never
+straddles a word.  Outputs follow the ``QueryResult`` contract: ``ids``
+(0-based predicate ids, ascending — the lists are stored sorted), prefix
+``valid`` mask, ``count`` = min(deg, L), ``overflow`` = deg > L.  Bit-exact
+against ``ref.pred_gather_ref`` and ``predindex._gather_traced``
+(tests/test_pred_gather.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _make_kernel(bytes_per_pred: int, cap: int):
+    mask_val = (1 << (8 * bytes_per_pred)) - 1 if bytes_per_pred < 4 else 0xFFFFFFFF
+
+    def kernel(rows_ref, offsets_ref, words_ref,
+               ids_ref, valid_ref, count_ref, ovf_ref):
+        mask = jnp.uint32(mask_val)
+        rows = rows_ref[...]
+        offsets = offsets_ref[...]
+        words = words_ref[...]
+        start = offsets[rows]
+        deg = offsets[rows + 1] - start
+        lane = jnp.arange(cap, dtype=jnp.int32)[None, :]
+        n = jnp.minimum(deg, cap)
+        valid = lane < n[:, None]
+        elem = jnp.where(valid, start[:, None] + lane, 0)
+        bidx = elem * bytes_per_pred
+        word = words[jnp.clip(bidx >> 2, 0, words.shape[0] - 1)]
+        shift = ((bidx & 3) * 8).astype(jnp.uint32)
+        pred = ((word >> shift) & mask).astype(jnp.int32)
+        ids_ref[...] = jnp.where(valid, pred, 0)
+        valid_ref[...] = valid
+        count_ref[...] = n.astype(jnp.int32)
+        ovf_ref[...] = deg > cap
+
+    return kernel
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bytes_per_pred", "cap", "block_q", "interpret")
+)
+def pred_gather(
+    rows: jax.Array,
+    offsets: jax.Array,
+    words: jax.Array,
+    *,
+    bytes_per_pred: int,
+    cap: int,
+    block_q: int = 256,
+    interpret: bool = False,
+):
+    """Batched CSR predicate-list gather.
+
+    Returns ``(ids, valid, count, overflow)`` with shapes
+    ``(Q, cap) / (Q, cap) / (Q,) / (Q,)``.  Q must divide by block_q;
+    ``rows`` must be pre-clipped to ``[0, len(offsets) - 2]``.
+    """
+    (q,) = rows.shape
+    assert q % block_q == 0, (q, block_q)
+    grid = (q // block_q,)
+    whole = lambda a: pl.BlockSpec(a.shape, lambda i: tuple(0 for _ in a.shape))
+    qvec = pl.BlockSpec((block_q,), lambda i: (i,))
+    qmat = pl.BlockSpec((block_q, cap), lambda i: (i, 0))
+    return pl.pallas_call(
+        _make_kernel(bytes_per_pred, cap),
+        grid=grid,
+        in_specs=[qvec, whole(offsets), whole(words)],
+        out_specs=(qmat, qmat, qvec, qvec),
+        out_shape=(
+            jax.ShapeDtypeStruct((q, cap), jnp.int32),
+            jax.ShapeDtypeStruct((q, cap), jnp.bool_),
+            jax.ShapeDtypeStruct((q,), jnp.int32),
+            jax.ShapeDtypeStruct((q,), jnp.bool_),
+        ),
+        interpret=interpret,
+    )(rows.astype(jnp.int32), offsets, words)

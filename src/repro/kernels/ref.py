@@ -217,6 +217,36 @@ def k2_scan_rebind_ref(
     )
 
 
+def pred_gather_ref(
+    rows: jax.Array,
+    offsets: jax.Array,
+    words: jax.Array,
+    *,
+    bytes_per_pred: int,
+    cap: int,
+):
+    """Identical semantics to kernels.pred_gather, phrased on raw CSR arrays.
+
+    Lane (q, j) holds the j-th packed entry of row ``rows[q]``; prefix
+    ``valid``, dead lanes zeroed, ``overflow`` = row longer than ``cap``.
+    The byte unpacking is ``predindex.payload_at`` — one source of truth
+    for the packing scheme; the Pallas kernel is the independent
+    implementation the differential harness checks against.
+    Returns (ids, valid, count, overflow).
+    """
+    from repro.core.predindex import payload_at
+
+    rows = jnp.asarray(rows, jnp.int32)
+    start = offsets[rows]
+    deg = offsets[rows + 1] - start
+    lane = jnp.arange(cap, dtype=jnp.int32)[None, :]
+    n = jnp.minimum(deg, cap)
+    valid = lane < n[:, None]
+    elem = jnp.where(valid, start[:, None] + lane, 0)
+    ids = jnp.where(valid, payload_at(words, elem, bytes_per_pred), 0)
+    return ids, valid, n.astype(jnp.int32), deg > cap
+
+
 def sorted_intersect_mask_ref(a_ids: jax.Array, b_ids: jax.Array) -> jax.Array:
     pos = jnp.searchsorted(b_ids, a_ids)
     got = jnp.take(b_ids, jnp.clip(pos, 0, b_ids.shape[0] - 1), mode="clip")

@@ -73,6 +73,64 @@ def case_engine():
     print("engine OK")
 
 
+def case_engine_pruned():
+    """Index-pruned unbounded serve IR on a predicate-sharded forest:
+    pruned [B, u_width, cap] psum == single-device answers == truth."""
+    from repro.core import engine as eng, k2triples
+    from repro.data import rdf
+
+    ds = rdf.generate(
+        3000, n_subjects=90, n_preds=16, n_objects=110,
+        preds_per_subject=4, seed=6,
+    )
+    store = k2triples.from_id_triples(
+        ds.ids, n_so=ds.n_so, n_subjects=ds.n_subjects,
+        n_objects=ds.n_objects, n_preds=ds.n_preds,
+    )
+    bi = store.pred_index
+    T = set(map(tuple, ds.ids.tolist()))
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    f_sh = eng.shard_forest(eng.pad_preds(store.forest, 4), mesh, "model")
+    rng = np.random.default_rng(1)
+    B = 32
+    ops = rng.integers(0, 6, B).astype(np.int32)
+    ids = ds.ids[rng.integers(0, ds.n_triples, B)]
+    q = eng.ServeBatch(
+        op=jnp.asarray(ops), s=jnp.asarray(ids[:, 0], jnp.int32),
+        p=jnp.asarray(np.where(ops >= 3, 0, ids[:, 1]), jnp.int32),
+        o=jnp.asarray(ids[:, 2], jnp.int32),
+    )
+    serve = eng.make_sharded_serve_step(store.meta, mesh, cap=128, pmeta=bi.meta)
+    r = serve(f_sh, q, bi.device)
+    ref = eng.make_serve_step(store.meta, cap=128, pmeta=bi.meta)(
+        store.forest, q, bi.device
+    )
+    for name, a, b in zip(r._fields, r, ref):
+        assert (np.asarray(a) == np.asarray(b)).all(), name
+    # spot-check against truth: every unbounded pair lane
+    up, ui, uv = (np.asarray(x) for x in (r.u_preds, r.u_ids, r.u_valid))
+    for i in range(B):
+        if ops[i] not in (3, 4):
+            continue
+        key = int(ids[i, 0] if ops[i] == 3 else ids[i, 2])
+        got = {
+            int(up[i, l]): ui[i, l][uv[i, l]].tolist()
+            for l in range(up.shape[1]) if up[i, l] and uv[i, l].any()
+        }
+        exp = {}
+        for (ss, pp, oo) in T:
+            if ops[i] == 3 and ss == key:
+                exp.setdefault(pp, []).append(oo)
+            if ops[i] == 4 and oo == key:
+                exp.setdefault(pp, []).append(ss)
+        assert got == {k: sorted(v) for k, v in exp.items()}, i
+    # the pruned path reduces [B, u_width, cap]; the wire never carries
+    # an arena- or P-sized gather
+    txt = jax.jit(serve).lower(f_sh, q, bi.device).compile().as_text()
+    assert txt.count("all-gather") == 0
+    print("engine_pruned OK")
+
+
 def case_compress():
     """int8 EF all-reduce: shared scale is exact-sum; EF kills bias."""
     from repro.dist import compress
@@ -170,6 +228,7 @@ if __name__ == "__main__":
     case = sys.argv[1]
     {
         "engine": case_engine,
+        "engine_pruned": case_engine_pruned,
         "compress": case_compress,
         "sortedset_union": case_sortedset_union,
         "moe_shmap": case_moe_shmap,

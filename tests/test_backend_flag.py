@@ -1,12 +1,16 @@
-"""Regression: ``REPRO_SCAN_BACKEND`` must be re-read, not latched at import.
+"""Regression: the kernel-layer env flags must be re-read, not latched.
 
-The original ``kernels/ops.py`` captured the env var once into a module
-constant, so a test or notebook setting it after import was silently
-ignored.  ``scan_backend()`` now consults the environment on every call.
+The original ``kernels/ops.py`` captured ``REPRO_SCAN_BACKEND`` once into a
+module constant, so a test or notebook setting it after import was silently
+ignored; ``scan_backend()`` now consults the environment on every call.
+``REPRO_PALLAS_INTERPRET`` had the same bug class (an ``INTERPRET`` module
+constant) — ``pallas_interpret()`` resolves it per call too.
 """
 
 import numpy as np
 import pytest
+
+import jax
 
 from repro.core import k2forest
 from repro.core.k2tree import K2Meta, hybrid_ks
@@ -33,6 +37,27 @@ def test_scan_backend_override_and_validation(monkeypatch):
     monkeypatch.setenv("REPRO_SCAN_BACKEND", "bogus")
     with pytest.raises(ValueError):
         ops.scan_backend()
+
+
+def test_pallas_interpret_rereads_env(monkeypatch):
+    """The INTERPRET-latch regression: flipping the var after import must be
+    honored by the per-call resolver."""
+    on_tpu = jax.default_backend() == "tpu"
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+    assert ops.pallas_interpret() == (not on_tpu)
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "0")
+    assert ops.pallas_interpret() is False  # the flip takes effect
+    monkeypatch.delenv("REPRO_PALLAS_INTERPRET")
+    assert ops.pallas_interpret() == (not on_tpu)  # default: interpret off-TPU
+    # explicit override wins regardless of the environment
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "0")
+    assert ops.pallas_interpret(True) is True
+    assert ops.pallas_interpret(False) is False
+
+
+def test_no_module_level_latch():
+    """The latched constant is gone: the module exposes only the resolver."""
+    assert not hasattr(ops, "INTERPRET")
 
 
 def test_env_flip_switches_dispatch(monkeypatch):

@@ -1,0 +1,236 @@
+"""SP/OP predicate-index differential suite (the k²-triples+ subsystem).
+
+210 randomized mini-stores — including empty subjects, single-predicate
+stores, and all-preds-hit rows — are packed into ONE combined store with
+disjoint subject/object/predicate ranges, so every logical store keeps its
+own random structure while the whole suite shares one set of array shapes
+(one compile per program).  The index-pruned unbounded path is asserted
+bit-exact against the all-preds sweep AND the brute-force triple set, on
+both scan backends.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import k2forest, k2triples, predindex
+from repro.core import engine as eng
+
+import jax.numpy as jnp
+
+N_STORES = 210
+SUB, OBJ, PRE = 12, 14, 6  # per-store dictionary extents
+
+
+def _gen_combined(seed=0):
+    """210 random mini-stores in disjoint id ranges -> one triple set."""
+    rng = np.random.default_rng(seed)
+    rows = []
+    for i in range(N_STORES):
+        s0, o0, p0 = i * SUB, i * OBJ, i * PRE
+        kind = i % 7
+        if kind == 0:
+            continue  # fully empty store (all its subjects are empty)
+        if kind == 1:  # single-predicate store
+            n = int(rng.integers(1, 20))
+            s = rng.integers(1, SUB + 1, n)
+            p = np.full(n, 1)
+            o = rng.integers(1, OBJ + 1, n)
+        elif kind == 2:  # all-preds-hit: one subject uses every predicate
+            s = np.full(PRE, 1 + int(rng.integers(0, SUB)))
+            p = np.arange(1, PRE + 1)
+            o = rng.integers(1, OBJ + 1, PRE)
+        elif kind == 3:  # dense-ish
+            n = int(rng.integers(40, 90))
+            s = rng.integers(1, SUB + 1, n)
+            p = rng.integers(1, PRE + 1, n)
+            o = rng.integers(1, OBJ + 1, n)
+        else:  # sparse random
+            n = int(rng.integers(1, 25))
+            s = rng.integers(1, SUB + 1, n)
+            p = rng.integers(1, PRE + 1, n)
+            o = rng.integers(1, OBJ + 1, n)
+        rows.append(np.stack([s + s0, p + p0, o + o0], axis=1))
+    ids = np.unique(np.concatenate(rows), axis=0)
+    return ids
+
+
+@pytest.fixture(scope="module")
+def combined():
+    ids = _gen_combined()
+    store = k2triples.from_id_triples(
+        ids, n_so=0, n_subjects=N_STORES * SUB, n_objects=N_STORES * OBJ,
+        n_preds=N_STORES * PRE,
+    )
+    T = set(map(tuple, ids.tolist()))
+    return store, T, ids
+
+
+def test_index_build_matches_bruteforce(combined):
+    store, T, ids = combined
+    bi = store.pred_index
+    sp = {}
+    op = {}
+    for (s, p, o) in T:
+        sp.setdefault(s, set()).add(p - 1)
+        op.setdefault(o, set()).add(p - 1)
+    rng = np.random.default_rng(1)
+    for s in rng.integers(1, store.n_subjects + 1, 300):
+        s = int(s)
+        assert bi.host_list(predindex.subject_row(s)).tolist() == sorted(
+            sp.get(s, ())
+        ), s
+    for o in rng.integers(1, store.n_objects + 1, 300):
+        o = int(o)
+        assert bi.host_list(predindex.object_row(bi.meta, o)).tolist() == sorted(
+            op.get(o, ())
+        ), o
+    # honest accounting: entries match the distinct-pair counts
+    assert bi.stats.sp_entries == sum(len(v) for v in sp.values())
+    assert bi.stats.op_entries == sum(len(v) for v in op.values())
+    assert bi.stats.payload_bits > 0 and bi.stats.dac_bits > 0
+    assert bi.stats.bits_per_triple > 0
+    assert bi.meta.max_degree <= PRE
+
+
+def _sample_keys(store, T, rng, n):
+    """Mixed subject/object keys: hits, empties, and out-of-range-free ids."""
+    subs = sorted({t[0] for t in T})
+    objs = sorted({t[2] for t in T})
+    keys, axes = [], []
+    for i in range(n):
+        if i % 4 == 0:  # an empty subject (store 0 mod 7 has none)
+            keys.append(int(rng.integers(1, SUB + 1)))
+            axes.append(0)
+        elif i % 4 == 1:
+            keys.append(int(subs[rng.integers(0, len(subs))]))
+            axes.append(0)
+        elif i % 4 == 2:
+            keys.append(int(objs[rng.integers(0, len(objs))]))
+            axes.append(1)
+        else:
+            keys.append(int(rng.integers(1, store.n_objects + 1)))
+            axes.append(1)
+    return np.array(keys, np.int64), np.array(axes, np.int32)
+
+
+@pytest.mark.parametrize("backend", ["pallas", "jnp"])
+def test_pruned_scan_vs_sweep_vs_truth(combined, backend):
+    """The acceptance gate: pruned == all-preds sweep == dense truth."""
+    store, T, ids = combined
+    bi = store.pred_index
+    cap = 32
+    rng = np.random.default_rng(2)
+    keys, axes = _sample_keys(store, T, rng, 16)
+    r = predindex.scan_pruned_batch(
+        store.meta, store.forest, bi.meta, bi.device, keys - 1, axes, cap,
+        bi.meta.max_degree, backend,
+    )
+    # the sweep reference: every predicate, broadcast keys, ONE launch
+    P = store.n_preds
+    preds_f = np.tile(np.arange(P, dtype=np.int32), len(keys))
+    sweep = k2forest.scan_batch_mixed(
+        store.meta, store.forest, preds_f, np.repeat(keys - 1, P),
+        np.repeat(axes, P), cap, backend,
+    )
+    sw_ids = np.asarray(sweep.ids).reshape(len(keys), P, cap)
+    sw_valid = np.asarray(sweep.valid).reshape(len(keys), P, cap)
+    pr, pv = np.asarray(r.preds), np.asarray(r.pvalid)
+    rid, rva = np.asarray(r.ids), np.asarray(r.valid)
+    assert not np.asarray(r.truncated).any()
+    for i in range(len(keys)):
+        k_ = int(keys[i])
+        cands = pr[i][pv[i]].tolist()
+        # candidates cover exactly the predicates with any result
+        truth_preds = sorted(
+            {p - 1 for (s, p, o) in T if (s if axes[i] == 0 else o) == k_}
+        )
+        assert cands == truth_preds, i
+        for p in range(P):
+            exp_sweep = sw_ids[i, p][sw_valid[i, p]].tolist()
+            if p in cands:
+                l = int(np.nonzero(pv[i] & (pr[i] == p))[0][0])
+                got = rid[i, l][rva[i, l]].tolist()
+                assert got == exp_sweep, (i, p)  # bit-exact vs the sweep
+                truth = sorted(
+                    (o - 1 if axes[i] == 0 else s - 1)
+                    for (s, pp, o) in T
+                    if pp - 1 == p and (s if axes[i] == 0 else o) == k_
+                )
+                assert got == truth[: len(got)] and (
+                    len(got) == len(truth) or cap < len(truth)
+                ), (i, p)
+            else:
+                assert exp_sweep == [], (i, p)  # non-candidates are empty
+
+
+@pytest.mark.parametrize("backend", ["pallas", "jnp"])
+def test_pruned_check_vs_all_preds(combined, backend):
+    store, T, ids = combined
+    bi = store.pred_index
+    rng = np.random.default_rng(3)
+    # pairs from real triples (hits guaranteed), plus misses
+    picks = ids[rng.integers(0, ids.shape[0], 24)]
+    s_arr = picks[:, 0].copy()
+    o_arr = picks[:, 2].copy()
+    o_arr[::3] = rng.integers(1, store.n_objects + 1, len(o_arr[::3]))  # misses
+    r = predindex.check_pruned_batch(
+        store.meta, store.forest, bi.meta, bi.device, s_arr - 1, o_arr - 1,
+        bi.meta.max_degree, backend,
+    )
+    for i in range(len(s_arr)):
+        allp = np.asarray(
+            k2forest.check_all_preds(
+                store.meta, store.forest, int(s_arr[i]) - 1, int(o_arr[i]) - 1
+            )
+        )
+        exp = np.nonzero(allp)[0].tolist()
+        got = np.asarray(r.ids[i])[np.asarray(r.valid[i])].tolist()
+        assert got == exp, i
+        truth = sorted(
+            p - 1 for (s, p, o) in T if s == s_arr[i] and o == o_arr[i]
+        )
+        assert got == truth, i
+
+
+@pytest.mark.parametrize("backend", ["pallas", "jnp"])
+def test_unified_serve_pruned_equals_fallback(combined, backend):
+    """One mixed six-op batch through the serve IR: the index-pruned program
+    and the all-preds fallback decode to identical answers."""
+    store, T, ids = combined
+    bi = store.pred_index
+    rng = np.random.default_rng(4)
+    B = 24
+    picks = ids[rng.integers(0, ids.shape[0], B)]
+    ops = rng.integers(0, 6, B).astype(np.int32)
+    q = eng.ServeBatch(
+        op=jnp.asarray(ops),
+        s=jnp.asarray(picks[:, 0], jnp.int32),
+        p=jnp.asarray(np.where(ops >= 3, 0, picks[:, 1]), jnp.int32),
+        o=jnp.asarray(picks[:, 2], jnp.int32),
+    )
+    cap = 32
+    pruned = eng.make_serve_step(store.meta, cap, backend=backend, pmeta=bi.meta)
+    fallback = eng.make_serve_step(
+        store.meta, cap, backend=backend, u_width=store.n_preds
+    )
+    r1 = pruned(store.forest, q, bi.device)
+    r2 = fallback(store.forest, q)
+    hit1, hit2 = np.asarray(r1.hit), np.asarray(r2.hit)
+    for i in range(B):
+        assert hit1[i] == hit2[i], i
+        if ops[i] in (1, 2, 5):
+            a = np.asarray(r1.ids[i])[np.asarray(r1.valid[i])]
+            b = np.asarray(r2.ids[i])[np.asarray(r2.valid[i])]
+            assert a.tolist() == b.tolist(), i
+        if ops[i] in (3, 4):
+            d1 = {
+                int(p): np.asarray(r1.u_ids[i, l])[np.asarray(r1.u_valid[i, l])].tolist()
+                for l, p in enumerate(np.asarray(r1.u_preds[i]))
+                if p and np.asarray(r1.u_valid[i, l]).any()
+            }
+            d2 = {
+                int(p): np.asarray(r2.u_ids[i, l])[np.asarray(r2.u_valid[i, l])].tolist()
+                for l, p in enumerate(np.asarray(r2.u_preds[i]))
+                if p and np.asarray(r2.u_valid[i, l]).any()
+            }
+            assert d1 == d2, i
