@@ -17,11 +17,14 @@ import numpy as np
 import jax
 
 from repro.core import joins, k2triples
+from repro.core.query import ExecConfig
 from repro.data import rdf
 
 
 def run(n_triples: int = 60_000, n_preds: int = 32, n_each: int = 10, seed=0,
         backends=("pallas", "jnp")):
+    """Times every category on each backend; the substrate is selected per
+    call through an explicit ``ExecConfig`` (never env mutation)."""
     ds = rdf.generate(
         n_triples, n_subjects=n_triples // 12, n_preds=n_preds,
         n_objects=n_triples // 8, seed=seed,
@@ -36,7 +39,8 @@ def run(n_triples: int = 60_000, n_preds: int = 32, n_each: int = 10, seed=0,
     qs = ds.ids[rng.integers(0, ds.n_triples, 2 * n_each)]
 
     out = {}
-    for be in backends:
+    for name in backends:
+        be = ExecConfig(backend=name)
         jit = jax.jit
         fns = {
             "A": jit(lambda p1, c1, p2, c2: joins.join_a(meta, f, p1, c1, "s", p2, c2, "s", cap, be).ids),
@@ -60,7 +64,7 @@ def run(n_triples: int = 60_000, n_preds: int = 32, n_each: int = 10, seed=0,
                 t0 = time.perf_counter()
                 jax.block_until_ready(fn(*args))
                 times.append(time.perf_counter() - t0)
-            out[f"{cat}[{be}]"] = float(np.mean(times) * 1e3)
+            out[f"{cat}[{name}]"] = float(np.mean(times) * 1e3)
     return out
 
 

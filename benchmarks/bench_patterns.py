@@ -25,7 +25,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import engine as eng, k2forest, k2triples, patterns
+from repro.core.query import ExecConfig
 from repro.data import rdf
+
+# benchmarks select the traversal substrate through explicit ExecConfigs —
+# never by mutating REPRO_SCAN_BACKEND (both columns of a backend sweep
+# must come from the same process state)
+BACKEND_CFGS = {be: ExecConfig(backend=be) for be in ("pallas", "jnp")}
 
 
 class VerticalTables:
@@ -135,9 +141,9 @@ def run(n_triples: int = 120_000, n_preds: int = 64, n_queries: int = 50, seed=0
     )
     args_p = [(p,) for s, p, o in args_spo]
     # range scan is backend-routed like the row/col scans: time both paths
-    for backend in ("pallas", "jnp"):
+    for backend, be_cfg in BACKEND_CFGS.items():
         j_p_be = jax.jit(
-            lambda p, be=backend: patterns.any_p_any(meta, f, p, cap, be).rows
+            lambda p, be=be_cfg: patterns.any_p_any(meta, f, p, cap, be).rows
         )
         out[f"(?S,P,?O)[{backend}]"] = (
             _timeit(lambda p, jf=j_p_be: jf(p).block_until_ready(), 10, *args_p),
@@ -153,8 +159,8 @@ def run(n_triples: int = 120_000, n_preds: int = 64, n_queries: int = 50, seed=0
         p=jnp.asarray(ids[:, 1], jnp.int32),
         o=jnp.asarray(ids[:, 2], jnp.int32),
     )
-    for backend in ("pallas", "jnp"):
-        serve = eng.make_serve_step(meta, cap=512, backend=backend)
+    for backend, be_cfg in BACKEND_CFGS.items():
+        serve = eng.make_serve_step(meta, cap=512, backend=be_cfg)
         serve(store.forest, q)
         t0 = time.perf_counter()
         for _ in range(3):
@@ -216,12 +222,12 @@ def run_pruned(
         ),
     }
     rows = []
-    for backend in ("pallas", "jnp"):
+    for backend, be_cfg in BACKEND_CFGS.items():
         pruned = eng.make_serve_step(
-            store.meta, cap, backend=backend, pmeta=bi.meta
+            store.meta, cap, backend=be_cfg, pmeta=bi.meta
         )
         sweep = eng.make_serve_step(
-            store.meta, cap, backend=backend, u_width=store.n_preds
+            store.meta, cap, backend=be_cfg, u_width=store.n_preds
         )
         for pat, q in batches.items():
             tp = _timeit(

@@ -1,28 +1,37 @@
 """Benchmark harness: one module per paper table + kernel microbenches.
 
-    PYTHONPATH=src python -m benchmarks.run [--fast] [--json OUT.json]
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--json [OUT.json]]
 
 Emits CSV blocks per table (the EXPERIMENTS.md §Paper-validation source;
 see EXPERIMENTS.md at the repo root for how to read each block, including
 the SP/OP index-overhead columns).  ``--json`` additionally writes every
-table as machine-readable JSON — CI uploads it as the ``BENCH_results``
-artifact, the start of the perf trajectory across PRs.
+table as machine-readable JSON — with no path it lands at
+``BENCH_results.json`` in the repo root, the committed perf-trajectory
+file (``BENCH_*.json``) that CI also uploads as an artifact.
+
+Every backend comparison is driven by explicit ``ExecConfig`` objects
+(see ``bench_patterns.BACKEND_CFGS`` / ``bench_joins.run``); the harness
+never mutates ``REPRO_SCAN_BACKEND``.
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import pathlib
 import sys
 import time
+
+DEFAULT_JSON = str(pathlib.Path(__file__).resolve().parent.parent / "BENCH_results.json")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true", help="smaller datasets")
     ap.add_argument(
-        "--json", metavar="PATH", default=None,
-        help="also write all tables as JSON (e.g. BENCH_results.json)",
+        "--json", metavar="PATH", nargs="?", const=DEFAULT_JSON, default=None,
+        help="also write all tables as JSON (default path: BENCH_results.json "
+        "at the repo root)",
     )
     args = ap.parse_args()
 

@@ -1,6 +1,10 @@
-"""Quickstart: N3 text -> dictionary -> k²-triples store -> SPARQL patterns.
+"""Quickstart: N3 text -> dictionary -> k²-triples store -> compiled plans.
 
     PYTHONPATH=src python examples/quickstart.py
+
+Queries are declarative (``TriplePatternQ`` / ``JoinQ``), execution knobs
+live in one frozen ``ExecConfig``, and ``Engine.compile`` returns a cached
+``Plan`` — compile once, run many.
 """
 
 import sys
@@ -8,6 +12,7 @@ import sys
 sys.path.insert(0, "src")
 
 from repro.core import engine, k2triples
+from repro.core.query import ExecConfig, JoinQ, TriplePatternQ
 from repro.data import rdf
 
 N3 = """
@@ -24,7 +29,8 @@ def main() -> None:
     triples = rdf.parse_n3(N3)
     store = k2triples.from_string_triples(triples)
     d = store.dictionary
-    E = engine.Engine(store, cap=64)
+    E = engine.Engine(store)
+    cfg = ExecConfig.from_env(cap=64)  # the one-time env-flag fold-in
     print(
         f"store: {store.n_triples} triples, {store.n_preds} predicates, "
         f"matrix side {store.meta.side}, structure {store.stats.total_bits} bits "
@@ -37,21 +43,29 @@ def main() -> None:
     acme = d.encode_object("http://ex/acme")
 
     # (S, P, ?O): who does alice know?
-    out = E.pattern(alice, knows, None)
-    print("alice knows:", [d.decode_object(int(o)) for o in out])
+    plan = E.compile(TriplePatternQ(alice, knows, "?who"), cfg)
+    print("alice knows:", [d.decode_object(int(o)) for o in plan()])
+
+    # the same compiled plan serves any (S, P, ?O) query — here as a batch
+    bob = d.encode_subject("http://ex/bob")
+    for objs in plan({"s": [alice, bob], "p": [knows, works]}):
+        print("  batched lane:", [d.decode_object(int(o)) for o in objs])
 
     # (?S, P, O): who works at acme?
-    out = E.pattern(None, works, acme)
+    out = E.compile(TriplePatternQ("?s", works, acme), cfg)()
     print("works at acme:", [d.decode_subject(int(s)) for s in out])
 
     # (S, ?P, ?O): everything about alice
-    out = E.pattern(alice, None, None)
+    out = E.compile(TriplePatternQ(alice, "?p", "?o"), cfg)()
     for p, objs in out.items():
         print(f"alice --{d.decode_predicate(p)}--> ",
               [d.decode_object(int(o)) for o in objs])
 
     # join A (SO cross-join): ?X such that alice knows ?X and ?X works at acme
-    xs = E.join("A", p1=knows, c1=alice, vpos1="o", p2=works, c2=acme, vpos2="s")
+    xs = E.compile(
+        JoinQ("A", vpos1="o", vpos2="s", p1=knows, c1=alice, p2=works, c2=acme),
+        cfg,
+    )()
     print("alice knows ∩ works-at-acme:", [d.decode_object(int(x)) for x in xs])
 
 

@@ -1,3 +1,23 @@
 # The paper's primary contribution — implement the SYSTEM here
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.
+#
+# Public query surface: `repro.core.query` (Query descriptions +
+# ExecConfig + Plan) and `repro.core.engine.Engine.compile` — see
+# EXPERIMENTS.md §"The query API". Re-exported lazily to keep
+# `import repro.core` free of jax initialization.
+
+
+def __getattr__(name):
+    if name in (
+        "ExecConfig", "CapPolicy", "CapOverflow", "Plan",
+        "TriplePatternQ", "JoinQ", "BgpQ", "ServeQ",
+    ):
+        from repro.core import query
+
+        return getattr(query, name)
+    if name == "Engine":
+        from repro.core.engine import Engine
+
+        return Engine
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

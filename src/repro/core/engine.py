@@ -1,16 +1,22 @@
-"""Query engine: host dispatch + jit'd batched ``serve_step`` (single & sharded).
+"""Query engine: ``Engine.compile(query, config) -> Plan`` over one jit'd
+batched ``serve_step`` (single & sharded).
 
 Two layers:
 
-  * ``Engine`` — host-side convenience: takes a triple pattern with ``None``
-    for variables, encodes it into the serve IR below, and decodes numpy
-    results.  This is the paper's per-query interface (Tables 3/4 are
-    measured on it); every keyed pattern rides ONE compiled program.
+  * ``Engine`` — the ONE host-side entry point: lowers any ``core.query``
+    description (``TriplePatternQ`` / ``JoinQ`` / ``BgpQ`` / ``ServeQ``)
+    under a frozen ``ExecConfig`` into a cached compiled ``Plan``.  Every
+    keyed pattern, join side-list, and BGP step rides the pooled serve-IR
+    programs below; cap overflow recovers by CapPolicy doubling.  The
+    pre-redesign ``Engine.pattern`` / ``Engine.join`` survive as
+    deprecation shims over ``compile``.
 
-  * ``make_serve_step`` / ``make_sharded_serve_step`` — the production path:
-    one compiled program serving a BATCH of queries spanning all keyed
+  * ``make_serve_step`` / ``make_sharded_serve_step`` — the compiled
+    substrate: one program serving a BATCH of queries spanning all keyed
     patterns — checks, mixed row/col scans, AND the unbounded-predicate
-    lanes (the serve IR ops below).
+    lanes (the serve IR ops below).  ``backend`` accepts an ``ExecConfig``
+    (explicit backend + interpret, zero env reads at trace time) or the
+    legacy string/None forms.
 
 Serve IR: a ``ServeBatch`` lane is ``(op, s, p, o)`` with
 
@@ -44,7 +50,7 @@ pruning shrinks the wire bytes by the same factor as the compute.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
+import warnings
 from typing import NamedTuple
 
 import jax
@@ -53,12 +59,17 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
-from repro.core import joins, k2forest, patterns, predindex
+from repro.core import joins, k2forest, patterns, predindex, query as qapi
 from repro.core.k2forest import K2Forest
 from repro.core.k2tree import _compact
 from repro.core.k2triples import K2TriplesStore
 from repro.core.k2tree import K2Meta
 from repro.core.predindex import PredIndex, PredIndexMeta
+from repro.core.query import (
+    BgpQ, CapOverflow, ExecConfig, JoinQ, Plan, ServeQ, TriplePatternQ,
+)
+from repro.core.sortedset import SENTINEL, IdSet
+from repro.core import sortedset
 
 # serve IR ops
 OP_CHECK = 0  # (S, P, O)    -> hit flag
@@ -222,6 +233,9 @@ def make_serve_step(
 ):
     """Single-device jit'd serve program.
 
+    ``backend``: an ``ExecConfig`` (explicit backend + interpret — the
+    compiled-plan path, no env reads at trace time), a "pallas"/"jnp"
+    string, or ``None`` (legacy env resolution at trace time).
     ``u_width`` candidate slots per unbounded lane (default:
     ``pmeta.max_degree`` when an index meta is given, else 0 = unbounded
     ops compiled out).  Call as ``serve_step(forest, batch[, index])`` —
@@ -468,27 +482,425 @@ def make_sharded_unbounded_scan(
 
 
 # ---------------------------------------------------------------------------
-# host-side convenience engine (the unified plan→serve pipeline)
+# the compiled-plan pipeline: Query -> Engine.compile(ExecConfig) -> Plan
+# ---------------------------------------------------------------------------
+
+
+_OP_FOR_SHAPE = {
+    (True, True, True): OP_CHECK,
+    (True, True, False): OP_ROW,
+    (False, True, True): OP_COL,
+    (True, False, True): OP_S_ANY_O,
+    (True, False, False): OP_S_ANY_ANY,
+    (False, False, True): OP_ANY_ANY_O,
+}
+_UNBOUNDED_OPS = (OP_S_ANY_O, OP_S_ANY_ANY, OP_ANY_ANY_O)
+
+
+class _ExecBase:
+    """Shared executor state: one per ``(shape_key, config)`` cache slot.
+
+    Holds the effective caps — grown in place by the :class:`CapPolicy`
+    doubling loop, so every plan sharing this executor benefits from a
+    growth paid once.
+    """
+
+    def __init__(self, engine: "Engine", cfg: ExecConfig):
+        self.engine = engine
+        self.cfg = cfg
+        self.cap = cfg.cap
+        self.cap_y = cfg.cap_y
+
+    def _grow(self, fn):
+        out, self.cap, self.cap_y = qapi.run_with_policy(
+            self.cfg.cap_policy, self.cap, self.cap_y, fn
+        )
+        return out
+
+    def compiled_text(self, q, batch):
+        raise NotImplementedError(f"{type(self).__name__} has no HLO view")
+
+    @staticmethod
+    def _overflow_guard(r):
+        if bool(np.asarray(r.overflow).any()):
+            raise CapOverflow(
+                "result lane truncated at cap; CapPolicy(grow=True) doubles"
+            )
+
+
+class _PatternExec(_ExecBase):
+    """Any of the eight triple-pattern shapes, single query or batched."""
+
+    def run(self, q: TriplePatternQ, batch):
+        s, p, o, b, single = self._consts(q, batch)
+        bound = q.bound
+        if bound == (False, True, False):  # (?S, P, ?O) pair enumeration
+            out = self._grow(lambda cap, _: self._run_pairs(p, b, cap))
+        elif bound == (False, False, False):  # (?S, ?P, ?O) dump
+            if batch is not None:
+                raise ValueError("the dump pattern takes no batch")
+            out = self._grow(lambda cap, _: self._run_dump(cap))
+        else:
+            op = _OP_FOR_SHAPE[bound]
+            out = self._grow(
+                lambda cap, _: self._run_serve(op, s, p, o, b, cap)
+            )
+        return out[0] if single else out
+
+    def _consts(self, q: TriplePatternQ, batch):
+        vals = {"s": q.s, "p": q.p, "o": q.o}
+        bound = dict(zip("spo", q.bound))
+        if batch is None:
+            b, single = 1, True
+            batch = {}
+        else:
+            if not batch:
+                raise ValueError(
+                    "batch must be a non-empty dict of bound-position id "
+                    "arrays (or None to use the query's own constants)"
+                )
+            bad = set(batch) - {k for k in "spo" if bound[k]}
+            if bad:
+                raise ValueError(
+                    f"batch keys {sorted(bad)} are not bound positions of {q!r}"
+                )
+            b, single = len(np.asarray(next(iter(batch.values())))), False
+        arrs = []
+        for k in "spo":
+            if k in batch:
+                a = np.asarray(batch[k], np.int64).reshape(-1)
+                if a.shape[0] != b:
+                    raise ValueError("batch arrays must share one length")
+            else:
+                a = np.full(b, vals[k] if bound[k] else 0, np.int64)
+            arrs.append(a)
+        return (*arrs, b, single)
+
+    def _run_serve(self, op, s, p, o, b, cap):
+        eng, cfg = self.engine, self.cfg
+        ops_a = np.full(b, op, np.int32)
+        if op not in _UNBOUNDED_OPS:
+            r = eng._run_lanes(cfg, cap, ops_a, s, p, o)
+            self._overflow_guard(r)
+            return self._decode(op, r, range(b))
+
+        bi = eng.store.pred_index if cfg.use_pred_index else None
+        if bi is None:
+            if cfg.mesh is not None:
+                raise ValueError(
+                    "sharded unbounded-?P serving needs the SP/OP index; "
+                    "build the store with_pred_index=True or drop mesh"
+                )
+            r = eng._run_lanes(
+                cfg, cap, ops_a, s, p, o,
+                u_width=max(eng.store.n_preds, 1), with_index=False,
+            )
+            self._overflow_guard(r)
+            return self._decode(op, r, range(b))
+
+        u_width = eng._u_width(cfg)
+        # quantile-sized lanes: pre-route outlier entities (candidate list
+        # longer than the lane — the device gather's `truncated` bit,
+        # mirrored on the host CSR) to the all-preds sweep fallback
+        rows = (
+            bi.meta.n_subjects + o - 1 if op == OP_ANY_ANY_O else s - 1
+        )
+        outlier = predindex.host_degrees(bi, rows) > u_width
+        out = [None] * b
+        in_idx = np.nonzero(~outlier)[0]
+        out_idx = np.nonzero(outlier)[0]
+        if in_idx.size:
+            r = eng._run_lanes(
+                cfg, cap, ops_a[in_idx], s[in_idx], p[in_idx], o[in_idx],
+                u_width=u_width, with_index=True,
+            )
+            self._overflow_guard(r)
+            for j, res in zip(in_idx, self._decode(op, r, range(in_idx.size))):
+                out[j] = res
+        if out_idx.size:
+            # outliers are the degree-distribution tail: served by the
+            # single-device all-preds sweep program, exact at any quantile
+            r = eng._run_lanes(
+                cfg.replace(mesh=None), cap,
+                ops_a[out_idx], s[out_idx], p[out_idx], o[out_idx],
+                u_width=max(eng.store.n_preds, 1), with_index=False,
+            )
+            self._overflow_guard(r)
+            for j, res in zip(out_idx, self._decode(op, r, range(out_idx.size))):
+                out[j] = res
+        return out
+
+    @staticmethod
+    def _decode(op, r, idxs):
+        if op == OP_CHECK:
+            hit = np.asarray(r.hit)
+            return [bool(hit[i]) for i in idxs]
+        if op in (OP_ROW, OP_COL, OP_S_ANY_O):
+            ids, valid = np.asarray(r.ids), np.asarray(r.valid)
+            return [ids[i][valid[i]] for i in idxs]
+        up, ui, uv = (np.asarray(a) for a in (r.u_preds, r.u_ids, r.u_valid))
+        return [
+            {
+                int(up[i, l]): ui[i, l][uv[i, l]]
+                for l in range(up.shape[1])
+                if up[i, l] and uv[i, l].any()
+            }
+            for i in idxs
+        ]
+
+    def _run_pairs(self, p, b, cap):
+        eng = self.engine
+        r = k2forest.range_scan_batch(
+            eng.meta, eng.forest, jnp.asarray(p - 1, jnp.int32), cap, self.cfg
+        )
+        self._overflow_guard(r)
+        rows, cols, valid = (np.asarray(a) for a in (r.rows, r.cols, r.valid))
+        return [
+            np.stack([rows[i][valid[i]] + 1, cols[i][valid[i]] + 1], axis=1)
+            for i in range(b)
+        ]
+
+    def _run_dump(self, cap):
+        eng = self.engine
+        r = patterns.dump(eng.meta, eng.forest, cap, self.cfg)
+        self._overflow_guard(r)
+        rows, cols, valid = (np.asarray(a) for a in (r.rows, r.cols, r.valid))
+        out = {}
+        for pi in range(eng.store.n_preds):
+            if valid[pi].any():
+                out[pi + 1] = np.stack(
+                    [rows[pi][valid[pi]], cols[pi][valid[pi]]], axis=1
+                )
+        return [out]
+
+
+class _JoinExec(_ExecBase):
+    """Join categories A–F.  A–C are pure serve-IR side-list lanes through
+    the shared compiled serve step (+ ``sortedset`` algebra); D–F run the
+    fused scan→rebind kernel path of ``core.joins``."""
+
+    def run(self, q: JoinQ, batch):
+        if batch is not None:
+            raise ValueError("join plans take no batch")
+        if q.category in "ABC":
+            return self._grow(lambda cap, _: self._run_abc(q, cap))
+        return self._grow(
+            lambda cap, cap_y: self._run_def(q, cap, cap_y)
+        )
+
+    @staticmethod
+    def _lane(vpos, p, c):
+        # ?X in subject position -> reverse neighbors (?S,P,O) = OP_COL;
+        # ?X in object position -> direct neighbors (S,P,?O) = OP_ROW
+        return (OP_COL, 0, p, c) if vpos == "s" else (OP_ROW, c, p, 0)
+
+    def _idset(self, r, i):
+        ids = jnp.where(r.valid[i], r.ids[i], SENTINEL)
+        return IdSet(ids, r.valid[i], r.count[i], jnp.asarray(False))
+
+    def _run_abc(self, q, cap):
+        eng, cfg = self.engine, self.cfg
+        Pn = eng.store.n_preds
+        if q.category == "A":
+            lanes = [
+                self._lane(q.vpos1, q.p1, q.c1),
+                self._lane(q.vpos2, q.p2, q.c2),
+            ]
+        elif q.category == "B":
+            lanes = [self._lane(q.vpos1, q.p1, q.c1)] + [
+                self._lane(q.vpos2, pp, q.c2) for pp in range(1, Pn + 1)
+            ]
+        else:  # C
+            lanes = [
+                self._lane(q.vpos1, pp, q.c1) for pp in range(1, Pn + 1)
+            ] + [self._lane(q.vpos2, pp, q.c2) for pp in range(1, Pn + 1)]
+        arr = np.asarray(lanes, np.int64)
+        r = eng._run_lanes(cfg, cap, arr[:, 0], arr[:, 1], arr[:, 2], arr[:, 3])
+        self._overflow_guard(r)
+
+        if q.category == "A":
+            rr = sortedset.intersect(self._idset(r, 0), self._idset(r, 1))
+            return np.asarray(rr.ids)[np.asarray(rr.valid)]
+        if q.category == "B":
+            a = self._idset(r, 0)
+            ids2 = jnp.where(r.valid[1:], r.ids[1:], SENTINEL)
+
+            def one(idp, vp):
+                b = IdSet(idp, vp, vp.sum().astype(jnp.int32), jnp.asarray(False))
+                rr = sortedset.intersect(a, b)
+                return rr.ids, rr.valid
+
+            ids, valid = jax.vmap(one)(ids2, r.valid[1:])
+            ids, valid = np.asarray(ids), np.asarray(valid)
+            return {
+                pi + 1: ids[pi][valid[pi]]
+                for pi in range(Pn)
+                if valid[pi].any()
+            }
+        ids = jnp.where(r.valid, r.ids, SENTINEL)
+        u1 = sortedset.union_rows(ids[:Pn], r.valid[:Pn], cap, False)
+        u2 = sortedset.union_rows(ids[Pn:], r.valid[Pn:], cap, False)
+        if bool(np.asarray(u1.overflow | u2.overflow)):
+            raise CapOverflow("side-list union truncated at cap")
+        rr = sortedset.intersect(u1, u2)
+        return np.asarray(rr.ids)[np.asarray(rr.valid)]
+
+    def _run_def(self, q, cap, cap_y):
+        eng, cfg = self.engine, self.cfg
+        m, f = eng.meta, eng.forest
+        if q.category == "D":
+            r = joins.join_d(
+                m, f, q.p1, q.c1, q.vpos1, q.p2, q.vpos2,
+                cap_x=cap, cap_y=cap_y, backend=cfg,
+            )
+            self._overflow_guard(r)
+            return _pairs_to_dict(r)
+        if q.category == "E":
+            r = joins.join_e(
+                m, f, q.p1, q.c1, q.vpos1, q.vpos2,
+                cap_x=cap, cap_y=cap_y, backend=cfg,
+            )
+        else:  # F
+            r = joins.join_f(
+                m, f, q.c1, q.vpos1, q.vpos2,
+                cap_x=cap, cap_y=cap_y, backend=cfg,
+            )
+        self._overflow_guard(r)
+        return _pairs_to_dict_pred(r)
+
+
+_ANON = "?__anon"  # internal prefix for None (anonymous) BGP positions
+
+
+class _BgpExec(_ExecBase):
+    """Basic graph patterns: the optimizer plans per call (its join order
+    is data-dependent), but every check / bounded-scan step resolves
+    through the engine's pooled serve-step programs.
+
+    ``None`` positions are EXISTENTIAL: they join like variables inside
+    the optimizer but are projected away from the result — only named
+    variables come back, with distinct rows over those columns.
+    """
+
+    def run(self, q: BgpQ, batch):
+        if batch is not None:
+            raise ValueError("BGP plans take no batch")
+        from repro.core import optimizer  # deferred: optimizer imports engine
+
+        pats = [
+            optimizer.TriplePattern(
+                *(
+                    t if not qapi.is_var(t) else (t or f"{_ANON}{i}{k}")
+                    for k, t in zip("spo", (tp.s, tp.p, tp.o))
+                )
+            )
+            for i, tp in enumerate(q.patterns)
+        ]
+
+        def fn(cap, _):
+            return optimizer.run_bgp(
+                self.engine.store, pats, cap=cap, exec_=self.cfg,
+                serve=self.engine._lanes_runner(self.cfg, cap),
+            )
+
+        out = self._grow(fn)
+        if not any(k.startswith(_ANON) for k in out):
+            return out
+        # project the anonymous columns away and re-dedup: the optimizer
+        # dedups over ALL columns, so dropping some can leave duplicate
+        # rows in the named ones
+        keep = sorted(k for k in out if not k.startswith(_ANON))
+        stacked = np.stack([out[k] for k in keep], axis=1)
+        uniq = np.unique(stacked, axis=0)
+        return {k: uniq[:, i] for i, k in enumerate(keep)}
+
+
+class _ServeExec(_ExecBase):
+    """Raw serve-IR passthrough: ``plan(ServeBatch) -> ServeResult``."""
+
+    def run(self, q: ServeQ, batch):
+        if batch is None:
+            raise ValueError("ServeQ plans take a ServeBatch")
+        if not isinstance(batch, ServeBatch):
+            batch = ServeBatch(*(jnp.asarray(a, jnp.int32) for a in batch))
+
+        def fn(cap, _):
+            r = self._call(batch, cap, q.unbounded)
+            self._overflow_guard(r)
+            return r
+
+        return self._grow(fn)
+
+    def _args(self, qb, cap, unbounded):
+        eng, cfg = self.engine, self.cfg
+        f = eng._forest_for(cfg)
+        if not unbounded:
+            return eng._program(cfg, cap, 0, False), (f, qb)
+        bi = eng.store.pred_index if cfg.use_pred_index else None
+        if bi is None:
+            if cfg.mesh is not None:
+                raise ValueError(
+                    "sharded unbounded-?P serving needs the SP/OP index"
+                )
+            fn = eng._program(cfg, cap, max(eng.store.n_preds, 1), False)
+            return fn, (f, qb, None)
+        fn = eng._program(cfg, cap, eng._u_width(cfg), True)
+        return fn, (f, qb, bi.device)
+
+    def _call(self, qb, cap, unbounded):
+        fn, args = self._args(qb, cap, unbounded)
+        return fn(*args)
+
+    def compiled_text(self, q, batch):
+        """Compiled-module text of the current program for this batch —
+        lets callers assert communication properties (e.g. the
+        sharded-smoke 'no all-gather on the wire' check)."""
+        fn, args = self._args(batch, self.cap, q.unbounded)
+        return fn.lower(*args).compile().as_text()
+
+
+# ---------------------------------------------------------------------------
+# host-side engine: compile queries against one store
 # ---------------------------------------------------------------------------
 
 
 @dataclasses.dataclass
 class Engine:
-    """Paper-facing interface: patterns with None variables + joins A–F.
+    """The one query entry point: ``Engine.compile(query, config) -> Plan``.
 
-    ``pattern`` encodes every keyed pattern into the serve IR and runs it
-    through ONE cached compiled ``serve_step`` — check, row/col scan, and
-    the three unbounded-?P ops all share a program.  Unbounded lanes are
-    index-pruned when the store carries a ``pred_index`` (the default);
-    ``use_pred_index=False`` forces the all-preds fallback sweep.
+    Queries are ``core.query`` descriptions (``TriplePatternQ`` / ``JoinQ``
+    / ``BgpQ`` / ``ServeQ``); execution knobs travel ONLY inside a frozen
+    :class:`ExecConfig`.  Compiled plans are cached on
+    ``(shape_key(query), config)`` — two queries of the same shape share
+    programs, caps, and growth state — and every keyed + unbounded pattern,
+    join side-list, and BGP step rides the same cached ``serve_step``
+    programs underneath.
+
+    ``cap`` / ``backend`` / ``use_pred_index`` are legacy construction
+    knobs (pre-ExecConfig); they seed :attr:`default_config` and feed the
+    deprecation shims :meth:`pattern` and :meth:`join`.
     """
 
     store: K2TriplesStore
     cap: int = 4096
     backend: str | None = None
     use_pred_index: bool = True
-    _serve_cache: dict = dataclasses.field(
+    config: ExecConfig | None = None
+    _plan_cache: dict = dataclasses.field(
         default_factory=dict, repr=False, compare=False
+    )
+    _programs: dict = dataclasses.field(
+        default_factory=dict, repr=False, compare=False
+    )
+    _sharded: dict = dataclasses.field(
+        default_factory=dict, repr=False, compare=False
+    )
+    _stats: dict = dataclasses.field(
+        default_factory=lambda: {"hits": 0, "misses": 0},
+        repr=False, compare=False,
+    )
+    _env_cfg: ExecConfig | None = dataclasses.field(
+        default=None, repr=False, compare=False
     )
 
     @property
@@ -499,120 +911,250 @@ class Engine:
     def forest(self) -> K2Forest:
         return self.store.forest
 
-    def _pidx(self):
-        return self.store.pred_index if self.use_pred_index else None
+    @property
+    def default_config(self) -> ExecConfig:
+        """Engine-level default: the explicit ``config`` if given, else the
+        one-time ``ExecConfig.from_env()`` snapshot overlaid with the
+        legacy ``cap``/``backend``/``use_pred_index`` fields."""
+        if self.config is not None:
+            return self.config.resolved()
+        if self._env_cfg is None:
+            self._env_cfg = ExecConfig.from_env()
+        cfg = self._env_cfg.replace(
+            cap=self.cap, use_pred_index=self.use_pred_index
+        )
+        if self.backend is not None:
+            cfg = cfg.replace(backend=self.backend)
+        return cfg.resolved()
 
-    def _serve(self, unbounded: bool):
-        # cache keyed on the live config so mutating cap/backend/
-        # use_pred_index after a query builds a fresh program; bounded ops
-        # get their own u_width=0 program so a plain check/scan never pays
-        # for the (masked) unbounded block
-        key = (self.cap, self.backend, self.use_pred_index, unbounded)
-        cache = self._serve_cache
-        if key not in cache:
-            bi = self._pidx()
-            if not unbounded:
-                cache[key] = make_serve_step(
-                    self.meta, self.cap, backend=self.backend
+    @property
+    def plan_cache_stats(self) -> dict:
+        return dict(self._stats, size=len(self._plan_cache))
+
+    # -- compile -------------------------------------------------------
+
+    def compile(self, q, config: ExecConfig | None = None) -> Plan:
+        """Lower ``q`` under ``config`` (default :attr:`default_config`).
+
+        Plans are cached on ``(shape_key, config)``: the constants inside
+        ``q`` are runtime inputs, so compiling a second query of the same
+        shape is a cache hit.
+        """
+        cfg = (config or self.default_config).resolved()
+        self._validate(q, cfg)
+        key = (qapi.shape_key(q), cfg)
+        ex = self._plan_cache.get(key)
+        if ex is None:
+            self._stats["misses"] += 1
+            ex = self._build_executor(q, cfg)
+            self._plan_cache[key] = ex
+        else:
+            self._stats["hits"] += 1
+        return Plan(q, cfg, ex)
+
+    def _validate(self, q, cfg: ExecConfig):
+        if isinstance(q, TriplePatternQ):
+            named = [t for t in (q.s, q.p, q.o) if isinstance(t, str)]
+            if len(named) != len(set(named)):
+                raise ValueError(
+                    "a variable repeated inside one pattern needs join "
+                    f"semantics; wrap it in BgpQ: {q!r}"
                 )
-            elif bi is not None:
-                cache[key] = make_serve_step(
-                    self.meta, self.cap, backend=self.backend, pmeta=bi.meta,
-                    u_width=max(bi.meta.max_degree, 1),
+        # a mesh request must never be silently dropped: only the serve-IR
+        # shapes are sharded today.  Pair enumeration / dump (range kernel),
+        # join rebinds D-F, and the BGP host loop's enumeration steps run
+        # on the unsharded forest, so reject the combination loudly.
+        if cfg.mesh is not None:
+            if isinstance(q, TriplePatternQ) and q.bound in (
+                (False, True, False), (False, False, False)
+            ):
+                raise ValueError(
+                    "pair-enumeration/dump plans are not sharded; drop "
+                    "ExecConfig.mesh for this shape"
+                )
+            if isinstance(q, JoinQ) and q.category in "DEF":
+                raise ValueError(
+                    f"join category {q.category} (fused scan->rebind) is "
+                    "not sharded; drop ExecConfig.mesh"
+                )
+            if isinstance(q, BgpQ):
+                raise ValueError(
+                    "BGP plans are not sharded (enumeration steps run "
+                    "single-device); drop ExecConfig.mesh"
+                )
+        if isinstance(q, BgpQ):
+            names = {v for tp in q.patterns for v in tp.variables}
+            if any(v.startswith(_ANON) for v in names):
+                raise ValueError(
+                    f"variable names starting with {_ANON!r} are reserved "
+                    "for anonymous (None) positions"
+                )
+            if not names and any(
+                qapi.is_var(t)
+                for tp in q.patterns for t in (tp.s, tp.p, tp.o)
+            ):
+                raise ValueError(
+                    "a BGP whose variables are all anonymous has no "
+                    "projectable columns; name at least one variable "
+                    "(or use a TriplePatternQ check shape)"
+                )
+        if (
+            isinstance(q, ServeQ)
+            and q.unbounded
+            and cfg.u_width_quantile < 1.0
+            and cfg.use_pred_index
+            and self.store.pred_index is not None
+        ):
+            raise ValueError(
+                "quantile-sized unbounded lanes need the decode-level sweep "
+                "fallback; raw ServeQ plans require u_width_quantile=1.0 "
+                "(use TriplePatternQ plans for quantile sizing)"
+            )
+
+    def _build_executor(self, q, cfg: ExecConfig):
+        if isinstance(q, TriplePatternQ):
+            return _PatternExec(self, cfg)
+        if isinstance(q, JoinQ):
+            return _JoinExec(self, cfg)
+        if isinstance(q, BgpQ):
+            return _BgpExec(self, cfg)
+        if isinstance(q, ServeQ):
+            return _ServeExec(self, cfg)
+        raise TypeError(f"not a Query: {q!r}")
+
+    # -- shared compiled-program machinery ------------------------------
+
+    def _u_width(self, cfg: ExecConfig) -> int:
+        bi = self.store.pred_index
+        if cfg.u_width_quantile >= 1.0:
+            return max(bi.meta.max_degree, 1)
+        # the quantile pass walks the whole host CSR — memoize per quantile
+        # so unbounded serve calls don't pay it repeatedly
+        key = ("u_width", cfg.u_width_quantile)
+        w = self._programs.get(key)
+        if w is None:
+            w = max(predindex.quantile_u_width(bi, cfg.u_width_quantile), 1)
+            self._programs[key] = w
+        return w
+
+    def _forest_for(self, cfg: ExecConfig) -> K2Forest:
+        if cfg.mesh is None:
+            return self.forest
+        key = (cfg.mesh, cfg.model_axis)
+        f = self._sharded.get(key)
+        if f is None:
+            mp = int(cfg.mesh.shape[cfg.model_axis])
+            f = shard_forest(
+                pad_preds(self.forest, mp), cfg.mesh, cfg.model_axis
+            )
+            self._sharded[key] = f
+        return f
+
+    def _program(self, cfg: ExecConfig, cap: int, u_width: int, with_index: bool):
+        """One cached compiled serve program per distinct geometry; shared
+        by every executor of this engine."""
+        key = (
+            cfg.backend, cfg.interpret, cfg.mesh, cfg.data_axes,
+            cfg.model_axis, cap, u_width, with_index,
+        )
+        fn = self._programs.get(key)
+        if fn is None:
+            pmeta = self.store.pred_index.meta if with_index else None
+            if cfg.mesh is None:
+                fn = make_serve_step(
+                    self.meta, cap, backend=cfg, pmeta=pmeta, u_width=u_width
                 )
             else:
-                cache[key] = make_serve_step(
-                    self.meta, self.cap, backend=self.backend,
-                    u_width=self.store.n_preds,
+                fn = make_sharded_serve_step(
+                    self.meta, cfg.mesh, cap, data_axes=cfg.data_axes,
+                    model_axis=cfg.model_axis, backend=cfg, pmeta=pmeta,
+                    u_width=u_width,
                 )
-        return cache[key]
+            self._programs[key] = fn
+        return fn
 
-    def pattern(self, s: int | None, p: int | None, o: int | None):
-        """Resolve one triple pattern; returns numpy (see the op table)."""
-        m, f, cap = self.meta, self.forest, self.cap
-        if p and not s and not o:  # (?S, P, ?O): pair enumeration
-            r = patterns.any_p_any(m, f, p, cap, self.backend)
-            v = np.asarray(r.valid)
-            return np.stack([np.asarray(r.rows)[v], np.asarray(r.cols)[v]], axis=1)
-        if not s and not p and not o:  # (?S, ?P, ?O): dump
-            r = patterns.dump(m, f, cap, self.backend)
-            out = {}
-            for pi in range(self.store.n_preds):
-                v = np.asarray(r.valid[pi])
-                if v.any():
-                    out[pi + 1] = np.stack(
-                        [np.asarray(r.rows[pi])[v], np.asarray(r.cols[pi])[v]],
-                        axis=1,
-                    )
+    def _pad_b(self, b: int, cfg: ExecConfig) -> int:
+        """Pad host batches to pow2 buckets (bounds retraces to log2 sizes);
+        sharded programs additionally need data-axis divisibility."""
+        n = 8
+        while n < b:
+            n <<= 1
+        if cfg.mesh is not None:
+            d = int(np.prod([cfg.mesh.shape[a] for a in cfg.data_axes]))
+            n = max(n, d)
+            n = ((n + d - 1) // d) * d
+        return n
+
+    def _run_lanes(
+        self, cfg: ExecConfig, cap: int, ops_a, s, p, o,
+        *, u_width: int = 0, with_index: bool = False,
+    ) -> ServeResult:
+        """Run serve-IR lanes through the cached program for this geometry.
+
+        Lanes are padded to a pow2 bucket with dead (op=-1) entries —
+        masked to zero output by ``_serve_local`` — and sliced back.  This
+        is the ONE dispatch every pattern plan, join side-list, and BGP
+        step shares.
+        """
+        b = int(np.shape(ops_a)[0])
+        n = self._pad_b(b, cfg)
+
+        def pad(a, fill):
+            out = np.full(n, fill, np.int32)
+            out[:b] = np.asarray(a, np.int64)
             return out
 
-        if s and p and o:
-            op = OP_CHECK
-        elif s and p:
-            op = OP_ROW
-        elif p and o:
-            op = OP_COL
-        elif s and o:
-            op = OP_S_ANY_O
-        elif s:
-            op = OP_S_ANY_ANY
+        qb = ServeBatch(
+            op=jnp.asarray(pad(ops_a, -1)),
+            s=jnp.asarray(pad(s, 0)),
+            p=jnp.asarray(pad(p, 0)),
+            o=jnp.asarray(pad(o, 0)),
+        )
+        f = self._forest_for(cfg)
+        fn = self._program(cfg, cap, u_width, with_index)
+        if with_index:
+            r = fn(f, qb, self.store.pred_index.device)
+        elif u_width > 0 and cfg.mesh is None:
+            r = fn(f, qb, None)
         else:
-            op = OP_ANY_ANY_O
-        q = ServeBatch(
-            op=jnp.asarray([op], jnp.int32),
-            s=jnp.asarray([s or 0], jnp.int32),
-            p=jnp.asarray([p or 0], jnp.int32),
-            o=jnp.asarray([o or 0], jnp.int32),
-        )
-        unbounded = op in (OP_S_ANY_O, OP_S_ANY_ANY, OP_ANY_ANY_O)
-        bi = self._pidx()
-        r = self._serve(unbounded)(
-            f, q, bi.device if (unbounded and bi is not None) else None
-        )
-        if op == OP_CHECK:
-            return bool(np.asarray(r.hit)[0])
-        if op in (OP_ROW, OP_COL, OP_S_ANY_O):
-            if op == OP_S_ANY_O and bool(np.asarray(r.overflow)[0]):
-                # the legacy bool[P] path was exact at any cap; never
-                # silently hand back a truncated predicate list
-                raise RuntimeError(
-                    "(S,?P,O) matches exceed cap; raise Engine.cap"
-                )
-            return np.asarray(r.ids)[0][np.asarray(r.valid)[0]]
-        u_preds = np.asarray(r.u_preds)[0]
-        u_ids = np.asarray(r.u_ids)[0]
-        u_valid = np.asarray(r.u_valid)[0]
-        return {
-            int(u_preds[l]): u_ids[l][u_valid[l]]
-            for l in range(u_preds.shape[0])
-            if u_preds[l] and u_valid[l].any()
-        }
+            r = fn(f, qb)
+        return jax.tree.map(lambda a: a[:b], r)
 
-    # joins ------------------------------------------------------------
+    def _lanes_runner(self, cfg: ExecConfig, cap: int):
+        """Bound-pred serve-lane callable handed to the BGP optimizer."""
+        return lambda ops_a, s, p, o: self._run_lanes(cfg, cap, ops_a, s, p, o)
+
+    # -- deprecation shims ----------------------------------------------
+
+    def pattern(self, s: int | None, p: int | None, o: int | None):
+        """DEPRECATED: build a ``TriplePatternQ`` and ``compile`` it.
+
+        Kept as a thin shim over the plan pipeline — identical results,
+        plus the CapPolicy growth the old path lacked.
+        """
+        warnings.warn(
+            "Engine.pattern is deprecated; use "
+            "Engine.compile(TriplePatternQ(s, p, o), ExecConfig(...))()",
+            DeprecationWarning, stacklevel=2,
+        )
+        q = TriplePatternQ(s or None, p or None, o or None)
+        return self.compile(q)()
+
     def join(self, category: str, **kw):
-        m, f = self.meta, self.forest
+        """DEPRECATED: build a ``JoinQ`` and ``compile`` it."""
+        warnings.warn(
+            "Engine.join is deprecated; use "
+            "Engine.compile(JoinQ(category, ...), ExecConfig(...))()",
+            DeprecationWarning, stacklevel=2,
+        )
         cap = kw.pop("cap", self.cap)
         cap_y = kw.pop("cap_y", 256)
-        if category == "A":
-            r = joins.join_a(m, f, cap=cap, **kw)
-            return np.asarray(r.ids)[np.asarray(r.valid)]
-        if category == "B":
-            r = joins.join_b(m, f, cap=cap, **kw)
-            ids, valid = np.asarray(r.ids), np.asarray(r.valid)
-            return {pi + 1: ids[pi][valid[pi]] for pi in range(ids.shape[0]) if valid[pi].any()}
-        if category == "C":
-            r = joins.join_c(m, f, cap=cap, **kw)
-            return np.asarray(r.ids)[np.asarray(r.valid)]
-        if category == "D":
-            r = joins.join_d(m, f, cap_x=cap, cap_y=cap_y, **kw)
-            return _pairs_to_dict(r)
-        if category == "E":
-            r = joins.join_e(m, f, cap_x=cap, cap_y=cap_y, **kw)
-            return _pairs_to_dict_pred(r)
-        if category == "F":
-            r = joins.join_f(m, f, cap_x=cap, cap_y=cap_y, **kw)
-            return _pairs_to_dict_pred(r)
-        raise ValueError(f"unknown join category {category!r}")
+        backend = kw.pop("backend", None)  # legacy per-call override
+        q = JoinQ(category=category, **kw)
+        cfg = self.default_config.replace(cap=cap, cap_y=cap_y)
+        if backend is not None:
+            cfg = cfg.replace(backend=backend)
+        return self.compile(q, cfg)()
 
 
 def _pairs_to_dict(r: joins.JoinPairs) -> dict[int, np.ndarray]:

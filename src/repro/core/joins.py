@@ -17,11 +17,14 @@ fixed-capacity IdSet / IdSetsPerPred / JoinPairs with validity masks.
 variable; the SS/OO/SO kind is implied by (vpos1, vpos2).  Cross (SO) joins
 rely on the dictionary's shared [1,|SO|] range — IDs are directly comparable.
 
-Every traversal routes through the ``core.k2forest`` batch entry points, so
-the whole join pipeline follows the ``REPRO_SCAN_BACKEND`` flag (or the
-per-call ``backend=`` keyword): "pallas" runs the batched ``k2_scan`` /
-fused ``k2_scan_rebind`` kernels, "jnp" the vmapped reference traversal —
-bit-identical outputs either way (tests/test_joins_kernel.py).
+Every traversal routes through the ``core.k2forest`` batch entry points;
+the ``backend=`` parameter accepts an ``ExecConfig`` (the compiled-plan
+path — ``Engine.compile(JoinQ(...))`` threads one through, categories A–C
+additionally resolving their side-lists via the shared serve-step
+programs) or a legacy "pallas"/"jnp" string / ``None`` (per-call
+``REPRO_SCAN_BACKEND`` resolution): "pallas" runs the batched ``k2_scan``
+/ fused ``k2_scan_rebind`` kernels, "jnp" the vmapped reference traversal
+— bit-identical outputs either way (tests/test_joins_kernel.py).
 
 Overflow is tracked per predicate wherever a predicate axis exists
 (``PerPredSets.overflow[P]``, ``JoinPairs.overflow[P]`` for E/F): a caller

@@ -14,6 +14,7 @@ to the hybrid-k power — exactly the paper's square-matrix construction).
 
 from __future__ import annotations
 
+import types
 from typing import NamedTuple, Sequence
 
 import jax
@@ -247,17 +248,20 @@ def scan_batch_mixed(
 ) -> QueryResult:
     """Batched mixed row/col scans: axes[i]==0 -> row (S,P,?O), 1 -> col.
 
-    ``backend`` selects the compute substrate: "pallas" routes to the batched
-    ``kernels.k2_scan`` TPU kernel, "jnp" to the vmapped level-synchronous
-    traversal below; None defers to ``kernels.ops.scan_backend()`` (the
-    ``REPRO_SCAN_BACKEND`` env flag, default "pallas").  Both produce
-    bit-identical QueryResults (tests/test_k2_scan.py).
+    ``backend`` selects the compute substrate: an ``ExecConfig``
+    (``core.query``) carries explicit backend + interpret values (the
+    compiled-plan path — zero env reads); a bare "pallas"/"jnp" string or
+    ``None`` falls back to the legacy ``REPRO_SCAN_BACKEND`` env
+    resolution.  "pallas" routes to the batched ``kernels.k2_scan`` TPU
+    kernel, "jnp" to the vmapped level-synchronous traversal below.  Both
+    produce bit-identical QueryResults (tests/test_k2_scan.py).
     """
     from repro.kernels import ops  # deferred: core must import without pallas
 
-    if ops.scan_backend(backend) == "pallas":
+    be, interp = ops.resolve_exec(backend)
+    if be == "pallas":
         ids, valid, count, overflow = ops.k2_scan_forest(
-            meta, f, preds, keys, axes, cap=cap
+            meta, f, preds, keys, axes, cap=cap, interpret=interp
         )
         return QueryResult(ids=ids, valid=valid, count=count, overflow=overflow)
     return jax.vmap(lambda p, x, a: _axis_scan_traced(meta, f, p, x, a, cap))(
@@ -317,18 +321,18 @@ def range_scan_batch(
 ) -> PairResult:
     """Batched (?S, P, ?O) pair enumeration, one lane per predicate.
 
-    ``backend`` selects the compute substrate exactly like
-    ``scan_batch_mixed``: "pallas" routes to the batched ``kernels.k2_range``
-    TPU kernel, "jnp" to the vmapped traversal above; None defers to the
-    ``REPRO_SCAN_BACKEND`` env flag.  Bit-identical outputs
-    (tests/test_k2_range.py).
+    ``backend`` resolves exactly like ``scan_batch_mixed`` (ExecConfig /
+    string / None): "pallas" routes to the batched ``kernels.k2_range``
+    TPU kernel, "jnp" to the vmapped traversal above.  Bit-identical
+    outputs (tests/test_k2_range.py).
     """
     from repro.kernels import ops  # deferred: core must import without pallas
 
     preds = jnp.asarray(preds, jnp.int32)
-    if ops.scan_backend(backend) == "pallas":
+    be, interp = ops.resolve_exec(backend)
+    if be == "pallas":
         rows, cols, valid, count, overflow = ops.k2_range_forest(
-            meta, f, preds, cap=cap
+            meta, f, preds, cap=cap, interpret=interp
         )
         return PairResult(rows, cols, valid, count, overflow)
     return jax.vmap(lambda p: _range_scan_traced(meta, f, p, cap))(preds)
@@ -375,17 +379,22 @@ def scan_rebind_batch(
     axes1 = jnp.asarray(axes1, jnp.int32)
     preds2 = jnp.asarray(preds2, jnp.int32)
     axes2 = jnp.asarray(axes2, jnp.int32)
-    if ops.scan_backend(backend) == "pallas":
+    be, interp = ops.resolve_exec(backend)
+    if be == "pallas":
         return ops.k2_scan_rebind_forest(
             meta, f, preds1, keys1, axes1, preds2, axes2,
-            cap_x=cap_x, cap_y=cap_y,
+            cap_x=cap_x, cap_y=cap_y, interpret=interp,
         )
     (q,) = preds1.shape
-    rx = scan_batch_mixed(meta, f, preds1, keys1, axes1, cap_x, "jnp")
+    # pin the resolved pair for the two sub-scans: re-passing a bare "jnp"
+    # string would re-resolve interpret from the environment — an env read
+    # inside compiled plan paths (tests/test_backend_flag.py)
+    pinned = types.SimpleNamespace(backend="jnp", interpret=interp)
+    rx = scan_batch_mixed(meta, f, preds1, keys1, axes1, cap_x, pinned)
     keys2 = jnp.where(rx.valid, rx.ids, 0).reshape(q * cap_x)
     p2 = jnp.broadcast_to(preds2[:, None], (q, cap_x)).reshape(q * cap_x)
     a2 = jnp.broadcast_to(axes2[:, None], (q, cap_x)).reshape(q * cap_x)
-    ry = scan_batch_mixed(meta, f, p2, keys2, a2, cap_y, "jnp")
+    ry = scan_batch_mixed(meta, f, p2, keys2, a2, cap_y, pinned)
     return (
         rx.ids, rx.valid, rx.count, rx.overflow,
         ry.ids.reshape(q, cap_x, cap_y), ry.valid.reshape(q, cap_x, cap_y),

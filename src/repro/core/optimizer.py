@@ -21,13 +21,19 @@ variables) on top of the pattern/join primitives:
     index-free fallback loops, as the differential reference).
 
 Variables are strings starting with '?'.  Returns bindings as numpy arrays.
-``backend=`` threads through to every traversal (the per-call
-``REPRO_SCAN_BACKEND`` override).
+
+Entry points: the compiled-plan pipeline lowers a ``core.query.BgpQ``
+through :func:`run_bgp` — execution knobs arrive as an ``ExecConfig`` and
+check / bounded-scan steps resolve through the engine's pooled compiled
+``serve_step`` programs (the ``serve`` callable).  The legacy
+:func:`execute_bgp` survives as a deprecation shim that builds the Query
+and runs the same core under the cap-growth policy.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any
 
 import jax.numpy as jnp
@@ -35,6 +41,8 @@ import numpy as np
 
 from repro.core import k2forest
 from repro.core.k2triples import K2TriplesStore
+from repro.core.query import BgpQ, CapOverflow, ExecConfig, TriplePatternQ
+from repro.core import query as qapi
 
 Term = Any  # int (bound id) | str '?var'
 
@@ -155,7 +163,7 @@ def _ragged_candidates(store: K2TriplesStore, keys: np.ndarray, axis: int):
 
 def _resolve_with_bindings(
     store, pat, bindings: dict[str, np.ndarray], cap: int,
-    backend: str | None = None,
+    backend=None, serve=None,
 ):
     """Resolve one pattern given current bindings -> columnar solution arrays.
 
@@ -163,6 +171,13 @@ def _resolve_with_bindings(
     pair enumeration, batched over existing binding rows; an unbounded ?p
     with a bound s/o position resolves over index-pruned candidates in ONE
     flat launch.
+
+    ``backend`` threads to the traversals (ExecConfig / string / None —
+    see ``k2forest.scan_batch_mixed``).  ``serve`` is an optional serve-IR
+    lane runner ``(ops, s, p, o) -> ServeResult`` (the engine's pooled
+    compiled ``serve_step``); when given, check and bounded-scan steps run
+    through it instead of raw ``k2forest`` launches, so an n-pattern BGP
+    shares the programs (and their jit cache) with every other plan.
     """
     meta, f = store.meta, store.forest
     n_rows = len(next(iter(bindings.values()))) if bindings else 1
@@ -218,13 +233,22 @@ def _resolve_with_bindings(
             row_idx, cand = np.arange(n_rows), p_arr - 1
         # a binding value re-used in predicate position may be out of range
         ok = (cand >= 0) & (cand < store.n_preds)
-        hit = np.asarray(
-            k2forest.check(
-                meta, f, jnp.asarray(np.where(ok, cand, 0)),
-                jnp.asarray(s_arr[row_idx] - 1),
-                jnp.asarray(o_arr[row_idx] - 1),
+        if serve is not None:
+            from repro.core import engine as _eng
+
+            r = serve(
+                np.where(ok, _eng.OP_CHECK, -1),
+                s_arr[row_idx], np.where(ok, cand + 1, 0), o_arr[row_idx],
             )
-        ) & ok
+            hit = np.asarray(r.hit) & ok
+        else:
+            hit = np.asarray(
+                k2forest.check(
+                    meta, f, jnp.asarray(np.where(ok, cand, 0)),
+                    jnp.asarray(s_arr[row_idx] - 1),
+                    jnp.asarray(o_arr[row_idx] - 1),
+                )
+            ) & ok
         keep = np.nonzero(hit)[0]
         emit(row_idx[keep], [(pat.p, cand[keep] + 1)])
         return finish()
@@ -240,16 +264,29 @@ def _resolve_with_bindings(
             emit(row_idx, [])
             return finish()
         ok = (cand >= 0) & (cand < store.n_preds)
-        r = k2forest.scan_batch_mixed(
-            meta, f, jnp.asarray(np.where(ok, cand, 0)),
-            jnp.asarray(key_arr[row_idx] - 1),
-            jnp.full(row_idx.shape, axis, jnp.int32), cap, backend,
-        )
-        if bool((np.asarray(r.overflow) & ok).any()):
-            raise RuntimeError(
-                "BGP scan truncated at cap; re-run execute_bgp with a larger cap"
+        if serve is not None:
+            from repro.core import engine as _eng
+
+            op = _eng.OP_ROW if axis == 0 else _eng.OP_COL
+            keys = key_arr[row_idx]
+            r = serve(
+                np.where(ok, op, -1),
+                keys if axis == 0 else np.zeros_like(keys),
+                np.where(ok, cand + 1, 0),
+                keys if axis == 1 else np.zeros_like(keys),
             )
-        ids = np.asarray(r.ids) + 1
+            if bool((np.asarray(r.overflow) & ok).any()):
+                raise CapOverflow("BGP scan truncated at cap")
+            ids = np.asarray(r.ids)  # serve ids are already 1-based
+        else:
+            r = k2forest.scan_batch_mixed(
+                meta, f, jnp.asarray(np.where(ok, cand, 0)),
+                jnp.asarray(key_arr[row_idx] - 1),
+                jnp.full(row_idx.shape, axis, jnp.int32), cap, backend,
+            )
+            if bool((np.asarray(r.overflow) & ok).any()):
+                raise CapOverflow("BGP scan truncated at cap")
+            ids = np.asarray(r.ids) + 1
         lanes, slots = np.nonzero(np.asarray(r.valid) & ok[:, None])
         rows = row_idx[lanes]
         emit(rows, [
@@ -267,10 +304,7 @@ def _resolve_with_bindings(
     )
     pr = k2forest.range_scan_batch(meta, f, jnp.asarray(upreds - 1), cap, backend)
     if bool(np.asarray(pr.overflow).any()):
-        raise RuntimeError(
-            "BGP pair enumeration truncated at cap; re-run execute_bgp with "
-            "a larger cap"
-        )
+        raise CapOverflow("BGP pair enumeration truncated at cap")
     pv = np.asarray(pr.valid)
     prow, pcol = np.asarray(pr.rows) + 1, np.asarray(pr.cols) + 1
     counts = pv.sum(axis=1)
@@ -305,15 +339,22 @@ def _pattern_holds(store: K2TriplesStore, pat: TriplePattern) -> bool:
     )
 
 
-def execute_bgp(
+def run_bgp(
     store: K2TriplesStore, patterns: list[TriplePattern], *, cap: int = 2048,
-    backend: str | None = None,
+    exec_: ExecConfig | str | None = None, serve=None,
 ) -> dict[str, np.ndarray]:
     """Plan + execute; returns columnar variable bindings (deduplicated).
 
+    The compiled-plan core behind ``Engine.compile(BgpQ(...))``: knobs come
+    from ``exec_`` (an ``ExecConfig``; strings/None are the legacy env
+    path), ``serve`` optionally routes check / bounded-scan steps through
+    the engine's pooled ``serve_step`` programs, and truncation raises
+    :class:`CapOverflow` for the plan's growth policy to handle.
+
     At least one pattern must carry a variable — for a fully ground (ASK-
     style) query the columnar return type cannot distinguish "holds" from
-    "fails"; use ``Engine.pattern`` / ``k2forest.check`` instead.
+    "fails"; use a check-shaped ``TriplePatternQ`` / ``k2forest.check``
+    instead.
     """
     # ground patterns are pure existence filters: bindings cannot represent
     # an "alive but zero-column" state, so evaluate them up front
@@ -321,21 +362,22 @@ def execute_bgp(
     patterns = [p for p in patterns if p.variables]
     if not patterns:
         raise ValueError(
-            "execute_bgp needs at least one pattern with a variable; use "
-            "k2forest.check / Engine.pattern for fully ground queries"
+            "a BGP needs at least one pattern with a variable; use "
+            "k2forest.check / a check-shaped TriplePatternQ for fully "
+            "ground queries"
         )
     if any(not _pattern_holds(store, g) for g in ground):
         return {v: np.zeros(0, np.int64) for p in patterns for v in p.variables}
     order = plan(store, patterns)
     first = patterns[order[0]]
     # seed: resolve the first pattern stand-alone
-    bindings = _resolve_with_bindings(store, first, {}, cap, backend)
+    bindings = _resolve_with_bindings(store, first, {}, cap, exec_, serve)
     bindings = {v: a for v, a in bindings.items() if v in first.variables}
     for idx in order[1:]:
         if not bindings or len(next(iter(bindings.values()))) == 0:
             return {v: np.zeros(0, np.int64) for p in patterns for v in p.variables}
         bindings = _resolve_with_bindings(
-            store, patterns[idx], bindings, cap, backend
+            store, patterns[idx], bindings, cap, exec_, serve
         )
     if bindings:
         # dedup solution rows
@@ -344,3 +386,33 @@ def execute_bgp(
         uniq = np.unique(stacked, axis=0)
         bindings = {k: uniq[:, i] for i, k in enumerate(keys)}
     return bindings
+
+
+def execute_bgp(
+    store: K2TriplesStore, patterns: list[TriplePattern], *, cap: int = 2048,
+    backend: str | None = None,
+) -> dict[str, np.ndarray]:
+    """DEPRECATED shim: build a ``BgpQ`` + ``ExecConfig`` and run the
+    compiled-plan core under the default cap-growth policy.
+
+    Use ``Engine.compile(BgpQ(...), ExecConfig(...))()`` — identical
+    results, plus plan/program caching across calls.
+    """
+    warnings.warn(
+        "execute_bgp is deprecated; use "
+        "Engine.compile(BgpQ(patterns), ExecConfig(...))()",
+        DeprecationWarning, stacklevel=2,
+    )
+    # the round-trip through BgpQ is the point of the shim: the patterns get
+    # the Query layer's coercion/validation before execution
+    q = BgpQ(tuple(TriplePatternQ(p.s, p.p, p.o) for p in patterns))
+    overrides = {"cap": cap}
+    if backend is not None:
+        overrides["backend"] = backend
+    cfg = ExecConfig.from_env(**overrides)
+    pats = [TriplePattern(t.s, t.p, t.o) for t in q.patterns]
+    out, _, _ = qapi.run_with_policy(
+        cfg.cap_policy, cfg.cap, cfg.cap_y,
+        lambda c, _: run_bgp(store, pats, cap=c, exec_=cfg),
+    )
+    return out

@@ -24,6 +24,14 @@ axis 0 is the CANDIDATE slot, with ``preds`` naming each slot's predicate;
 ``s_any_o`` returns the matching predicates as a ``QueryResult`` list).
 Without an index the all-preds sweep runs (the differential reference):
 per-predicate layouts with axis 0 = predicate, exactly the paper's shapes.
+
+Execution knobs: every routed function's ``backend`` parameter accepts an
+``ExecConfig`` (``core.query``) — the compiled-plan path threads one
+through, so no environment flag is consulted — or a legacy "pallas"/"jnp"
+string / ``None`` (per-call env resolution).  The serving hot path no
+longer lives here: ``Engine.compile`` lowers patterns straight to the
+serve IR; these functions remain the per-primitive reference surface
+(and back the (?S,P,?O) / dump plan shapes).
 """
 
 from __future__ import annotations

@@ -197,6 +197,49 @@ def build(
     )
 
 
+def quantile_u_width(bi: BuiltPredIndex, quantile: float) -> int:
+    """Candidate-lane width at a degree quantile, sized PER AXIS.
+
+    ``max_degree`` is dominated by hub entities (a class object touching
+    ~all |P| predicates widens every unbounded lane back toward the sweep);
+    sizing at a quantile of the nonzero per-entity degree distribution —
+    separately for the SP (subject) and OP (object) halves, then unified
+    with ``max`` so either axis of a mixed batch is covered at its own
+    quantile — keeps the lane narrow.  Entities whose list exceeds the
+    returned width trip the gather's ``truncated`` bit and must be routed
+    to the all-preds sweep fallback (``degree_rows``/``host_degrees`` give
+    the host-side pre-route; the plan layer does this automatically).
+
+    ``quantile=1.0`` reproduces ``max(max_sp_degree, max_op_degree, 1)``
+    exactly.
+    """
+    if not (0.0 < quantile <= 1.0):
+        raise ValueError(f"quantile must be in (0, 1], got {quantile}")
+    offs = bi.host_offsets
+    ns = bi.meta.n_subjects
+    widths = []
+    for deg in (np.diff(offs[: ns + 1]), np.diff(offs[ns:])):
+        deg = deg[deg > 0]
+        if deg.size:
+            widths.append(int(np.ceil(np.quantile(deg, quantile))))
+    return max(widths, default=1) if widths else 1
+
+
+def host_degrees(bi: BuiltPredIndex, rows: np.ndarray) -> np.ndarray:
+    """Per-entity candidate-list lengths from the host CSR (O(1) per row).
+
+    ``rows`` are 0-based entity rows (subjects then objects, the shared
+    arena layout); out-of-range rows report degree 0.  This is the exact
+    host-side mirror of the device gather's ``truncated`` criterion
+    (``degree > u_width``), used to pre-route outliers to the sweep.
+    """
+    offs = bi.host_offsets
+    rows = np.asarray(rows, np.int64)
+    ok = (rows >= 0) & (rows < offs.shape[0] - 1)
+    r = np.where(ok, rows, 0)
+    return np.where(ok, offs[r + 1] - offs[r], 0)
+
+
 # ---------------------------------------------------------------------------
 # device queries
 # ---------------------------------------------------------------------------
@@ -239,17 +282,18 @@ def gather_batch(
 ) -> QueryResult:
     """Batched candidate-predicate gather (the ragged-gather launch layout).
 
-    ``backend`` routes exactly like ``k2forest.scan_batch_mixed``: "pallas"
-    runs the ``kernels.pred_gather`` kernel, "jnp" the reference above; None
-    defers to ``REPRO_SCAN_BACKEND``.  Bit-identical outputs
+    ``backend`` resolves exactly like ``k2forest.scan_batch_mixed``
+    (ExecConfig / string / None): "pallas" runs the ``kernels.pred_gather``
+    kernel, "jnp" the reference above.  Bit-identical outputs
     (tests/test_pred_gather.py).
     """
     from repro.kernels import ops  # deferred: core must import without pallas
 
     rows = jnp.asarray(rows, jnp.int32)
-    if ops.scan_backend(backend) == "pallas":
+    be, interp = ops.resolve_exec(backend)
+    if be == "pallas":
         ids, valid, count, overflow = ops.pred_gather_index(
-            pmeta, index, rows, cap=cap
+            pmeta, index, rows, cap=cap, interpret=interp
         )
         return QueryResult(ids=ids, valid=valid, count=count, overflow=overflow)
     return _gather_traced(pmeta, index, rows, cap)

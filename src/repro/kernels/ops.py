@@ -1,6 +1,19 @@
 """Public jit'd entry points for the kernel layer.
 
-Environment flags:
+Execution knobs reach this layer one of two ways:
+
+  * **the compiled-plan path** (``core.query.ExecConfig`` threaded through
+    ``Engine.compile`` → patterns/joins/optimizer → ``core.k2forest``):
+    the config object carries explicit ``backend`` + ``interpret`` values
+    and ``resolve_exec`` honors them with ZERO environment reads — nothing
+    inside a compiled ``Plan.__call__`` consults ``os.environ``
+    (tests/test_backend_flag.py);
+  * **the legacy path** (``backend=None`` or a bare string from the
+    deprecation shims / ad-hoc calls): ``scan_backend()`` /
+    ``pallas_interpret()`` resolve the environment flags below per call.
+
+Environment flags (legacy defaults — fold them into an explicit config
+once via ``ExecConfig.from_env()``):
 
 ``REPRO_PALLAS_INTERPRET``
     (re-read on every entry-point call — same semantics as the scan-backend
@@ -79,6 +92,31 @@ def scan_backend(override: str | None = None) -> str:
     return b
 
 
+def resolve_exec(backend=None) -> tuple[str, bool]:
+    """Resolve ``(backend, interpret)`` for one traversal dispatch.
+
+    ``backend`` may be an ``ExecConfig``-shaped object (anything with
+    ``.backend`` / ``.interpret`` attributes — duck-typed so core modules
+    need no import of ``core.query``), a bare backend string, or ``None``.
+    A config resolves WITHOUT touching the environment: its values are
+    explicit (``interpret=None`` means the deterministic off-TPU default).
+    A string or ``None`` falls back to the legacy per-call env resolution.
+    """
+    cfg_backend = getattr(backend, "backend", None)
+    if cfg_backend is not None:
+        if cfg_backend not in ("pallas", "jnp"):
+            raise ValueError(
+                f"unknown scan backend {cfg_backend!r} (want 'pallas' or 'jnp')"
+            )
+        interp = backend.interpret
+        if interp is None:
+            from repro.core.query import default_interpret
+
+            interp = default_interpret()
+        return cfg_backend, bool(interp)
+    return scan_backend(backend), pallas_interpret()
+
+
 def popcount(words: jax.Array, *, block_m: int = 8) -> jax.Array:
     return _pc.popcount_2d(words, block_m=block_m, interpret=pallas_interpret())
 
@@ -108,6 +146,7 @@ def k2_scan_forest(
     *,
     cap: int,
     block_q: int = 256,
+    interpret: bool | None = None,
 ):
     """Kernel-backed batched mixed row/col scan over a K2Forest.
 
@@ -115,6 +154,8 @@ def k2_scan_forest(
     here when the scan backend is "pallas").  Queries are padded up to a
     ``block_q`` multiple; padded lanes traverse tree 0 at key 0 and are
     sliced off before returning.  Returns (ids, valid, count, overflow).
+    ``interpret=None`` defers to the legacy env flag; the compiled-plan
+    path always passes an explicit bool.
     """
     (q,) = jnp.shape(preds)
     bq = min(block_q, max(1, q))
@@ -130,7 +171,7 @@ def k2_scan_forest(
         meta, preds, keys, axes,
         forest.t_words, forest.t_rank, forest.l_words,
         forest.ones_before, forest.level_start,
-        cap=cap, block_q=bq, interpret=pallas_interpret(),
+        cap=cap, block_q=bq, interpret=pallas_interpret(interpret),
     )
     return ids[:q], valid[:q], count[:q], overflow[:q]
 
@@ -142,6 +183,7 @@ def k2_range_forest(
     *,
     cap: int,
     block_q: int = 8,
+    interpret: bool | None = None,
 ):
     """Kernel-backed batched (?S,P,?O) pair enumeration over a K2Forest.
 
@@ -160,7 +202,7 @@ def k2_range_forest(
         meta, preds,
         forest.t_words, forest.t_rank, forest.l_words,
         forest.ones_before, forest.level_start,
-        cap=cap, block_q=bq, interpret=pallas_interpret(),
+        cap=cap, block_q=bq, interpret=pallas_interpret(interpret),
     )
     return rows[:q], cols[:q], valid[:q], count[:q], overflow[:q]
 
@@ -177,6 +219,7 @@ def k2_scan_rebind_forest(
     cap_x: int,
     cap_y: int,
     block_q: int = 1,
+    interpret: bool | None = None,
 ):
     """Kernel-backed fused X-scan + re-bind (join categories D–F).
 
@@ -196,7 +239,8 @@ def k2_scan_rebind_forest(
         meta, *arrs,
         forest.t_words, forest.t_rank, forest.l_words,
         forest.ones_before, forest.level_start,
-        cap_x=cap_x, cap_y=cap_y, block_q=bq, interpret=pallas_interpret(),
+        cap_x=cap_x, cap_y=cap_y, block_q=bq,
+        interpret=pallas_interpret(interpret),
     )
     return tuple(a[:q] for a in out)
 
@@ -208,6 +252,7 @@ def pred_gather_index(
     *,
     cap: int,
     block_q: int = 256,
+    interpret: bool | None = None,
 ):
     """Kernel-backed candidate-predicate gather over a PredIndex.
 
@@ -227,7 +272,7 @@ def pred_gather_index(
     ids, valid, count, overflow = _pg.pred_gather(
         rows, index.offsets, index.words,
         bytes_per_pred=pmeta.bytes_per_pred, cap=cap, block_q=bq,
-        interpret=pallas_interpret(),
+        interpret=pallas_interpret(interpret),
     )
     return ids[:q], valid[:q], count[:q], overflow[:q]
 

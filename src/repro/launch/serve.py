@@ -1,7 +1,11 @@
-"""Serving driver for the k²-triples engine: build a store, serve query
-batches through the compiled (optionally sharded) serve step.
+"""Serving driver for the k²-triples engine: build a store, compile ONE
+serve plan (optionally sharded), stream query batches through it.
 
     python -m repro.launch.serve --triples 100000 --batch 1024 --queries 10
+
+All execution knobs ride an explicit ``ExecConfig`` — the env flags are
+folded in once via ``ExecConfig.from_env()``; the hot loop is
+``plan(batch)`` with zero per-call configuration.
 """
 
 from __future__ import annotations
@@ -21,10 +25,15 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=1024)
     ap.add_argument("--queries", type=int, default=10, help="batches to serve")
     ap.add_argument("--cap", type=int, default=1024)
+    ap.add_argument(
+        "--backend", default=None, choices=("pallas", "jnp"),
+        help="scan backend override (default: ExecConfig.from_env)",
+    )
     ap.add_argument("--sharded", action="store_true", help="shard over local devices")
     args = ap.parse_args()
 
     from repro.core import engine as eng, k2triples
+    from repro.core.query import ExecConfig, ServeQ
     from repro.data import rdf
 
     ds = rdf.generate(
@@ -46,20 +55,20 @@ def main() -> None:
         f"built in {time.time()-t0:.1f}s"
     )
 
-    rng = np.random.default_rng(1)
-    serve = None
-    forest = store.forest
+    overrides: dict = {"cap": args.cap}
+    if args.backend is not None:
+        overrides["backend"] = args.backend
     if args.sharded and len(jax.devices()) > 1:
         n = len(jax.devices())
         mp = min(4, n)
-        mesh = jax.make_mesh((n // mp, mp), ("data", "model"))
-        forest = eng.pad_preds(store.forest, mp)
-        forest = eng.shard_forest(forest, mesh, "model")
-        serve = eng.make_sharded_serve_step(store.meta, mesh, args.cap)
-        print(f"sharded over mesh {dict(mesh.shape)}")
-    else:
-        serve = eng.make_serve_step(store.meta, args.cap)
+        overrides["mesh"] = jax.make_mesh((n // mp, mp), ("data", "model"))
+        print(f"sharded over mesh {dict(overrides['mesh'].shape)}")
+    cfg = ExecConfig.from_env(**overrides)
 
+    engine = eng.Engine(store)
+    plan = engine.compile(ServeQ(unbounded=False), cfg)
+
+    rng = np.random.default_rng(1)
     lat = []
     hits = results = 0
     for i in range(args.queries):
@@ -71,7 +80,7 @@ def main() -> None:
             o=jnp.asarray(ids[:, 2], jnp.int32),
         )
         t0 = time.time()
-        r = serve(forest, q)
+        r = plan(q)
         jax.block_until_ready(r.ids)
         lat.append(time.time() - t0)
         hits += int(np.asarray(r.hit).sum())

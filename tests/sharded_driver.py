@@ -17,8 +17,10 @@ from repro.compat import shard_map
 
 
 def case_engine():
-    """Predicate-sharded serve step == single-device answers."""
+    """Predicate-sharded serve Plan (the compiled-plan API end to end):
+    ``Engine.compile(ServeQ, ExecConfig(mesh=...))`` == truth."""
     from repro.core import engine as eng, k2triples
+    from repro.core.query import ExecConfig, ServeQ
     from repro.data import rdf
 
     ds = rdf.generate(2000, n_subjects=100, n_preds=7, n_objects=120, seed=3)
@@ -28,8 +30,8 @@ def case_engine():
     )
     T = set(map(tuple, ds.ids.tolist()))
     mesh = jax.make_mesh((2, 4), ("data", "model"))
-    f_pad = eng.pad_preds(store.forest, 4)
-    f_sh = eng.shard_forest(f_pad, mesh, "model")
+    E = eng.Engine(store)
+    plan = E.compile(ServeQ(unbounded=False), ExecConfig.from_env(cap=256, mesh=mesh))
     rng = np.random.default_rng(0)
     B = 32
     ops = rng.integers(0, 3, B).astype(np.int32)
@@ -38,8 +40,7 @@ def case_engine():
         op=jnp.asarray(ops), s=jnp.asarray(ids[:, 0], jnp.int32),
         p=jnp.asarray(ids[:, 1], jnp.int32), o=jnp.asarray(ids[:, 2], jnp.int32),
     )
-    serve = eng.make_sharded_serve_step(store.meta, mesh, cap=256)
-    r = serve(f_sh, q)
+    r = plan(q)
     hit, rids, valid = np.asarray(r.hit), np.asarray(r.ids), np.asarray(r.valid)
     for i in range(B):
         s_, p_, o_ = map(int, ids[i])
@@ -53,7 +54,10 @@ def case_engine():
             assert rids[i][valid[i]].tolist() == sorted(
                 ss for (ss, pp, oo) in T if pp == p_ and oo == o_
             ), i
-    # unbounded-predicate sweep (the paper's worst case, parallelized)
+    # unbounded-predicate sweep (the paper's worst case, parallelized) —
+    # kept on the reference entry point: it is the index-free fallback
+    f_pad = eng.pad_preds(store.forest, 4)
+    f_sh = eng.shard_forest(f_pad, mesh, "model")
     unb = eng.make_sharded_unbounded_scan(store.meta, mesh, cap=128)
     keys = jnp.asarray(ids[:8, 0], jnp.int32)
     axes = jnp.zeros((8,), jnp.int32)
@@ -68,15 +72,16 @@ def case_engine():
             )
             assert got == exp, (i, pp)
     # no arena-sized all-gathers in the compiled module
-    txt = jax.jit(serve).lower(f_sh, q).compile().as_text()
+    txt = plan.compiled_text(q)
     assert txt.count("all-gather") == 0
     print("engine OK")
 
 
 def case_engine_pruned():
-    """Index-pruned unbounded serve IR on a predicate-sharded forest:
-    pruned [B, u_width, cap] psum == single-device answers == truth."""
+    """Index-pruned unbounded serve IR on a predicate-sharded forest, via
+    the compiled-plan API: sharded Plan == single-device Plan == truth."""
     from repro.core import engine as eng, k2triples
+    from repro.core.query import ExecConfig, ServeQ
     from repro.data import rdf
 
     ds = rdf.generate(
@@ -87,10 +92,11 @@ def case_engine_pruned():
         ds.ids, n_so=ds.n_so, n_subjects=ds.n_subjects,
         n_objects=ds.n_objects, n_preds=ds.n_preds,
     )
-    bi = store.pred_index
     T = set(map(tuple, ds.ids.tolist()))
     mesh = jax.make_mesh((2, 4), ("data", "model"))
-    f_sh = eng.shard_forest(eng.pad_preds(store.forest, 4), mesh, "model")
+    E = eng.Engine(store)
+    plan_sh = E.compile(ServeQ(), ExecConfig.from_env(cap=128, mesh=mesh))
+    plan_1d = E.compile(ServeQ(), ExecConfig.from_env(cap=128))
     rng = np.random.default_rng(1)
     B = 32
     ops = rng.integers(0, 6, B).astype(np.int32)
@@ -100,11 +106,8 @@ def case_engine_pruned():
         p=jnp.asarray(np.where(ops >= 3, 0, ids[:, 1]), jnp.int32),
         o=jnp.asarray(ids[:, 2], jnp.int32),
     )
-    serve = eng.make_sharded_serve_step(store.meta, mesh, cap=128, pmeta=bi.meta)
-    r = serve(f_sh, q, bi.device)
-    ref = eng.make_serve_step(store.meta, cap=128, pmeta=bi.meta)(
-        store.forest, q, bi.device
-    )
+    r = plan_sh(q)
+    ref = plan_1d(q)
     for name, a, b in zip(r._fields, r, ref):
         assert (np.asarray(a) == np.asarray(b)).all(), name
     # spot-check against truth: every unbounded pair lane
@@ -124,9 +127,24 @@ def case_engine_pruned():
             if ops[i] == 4 and oo == key:
                 exp.setdefault(pp, []).append(ss)
         assert got == {k: sorted(v) for k, v in exp.items()}, i
+    # a pattern plan on the same mesh config: lanes pad to the data axis
+    # and decode from the psum'd u_* block
+    from repro.core.query import TriplePatternQ
+
+    s0 = int(ids[0, 0])
+    got = E.compile(
+        TriplePatternQ(s0, "?p", "?o"), ExecConfig.from_env(cap=128, mesh=mesh)
+    )()
+    exp = {}
+    for (ss, pp, oo) in T:
+        if ss == s0:
+            exp.setdefault(pp, []).append(oo)
+    assert {k: v.tolist() for k, v in got.items()} == {
+        k: sorted(v) for k, v in exp.items()
+    }
     # the pruned path reduces [B, u_width, cap]; the wire never carries
     # an arena- or P-sized gather
-    txt = jax.jit(serve).lower(f_sh, q, bi.device).compile().as_text()
+    txt = plan_sh.compiled_text(q)
     assert txt.count("all-gather") == 0
     print("engine_pruned OK")
 
@@ -165,21 +183,24 @@ def case_sortedset_union():
     from repro.core import engine as eng, k2triples
     from repro.data import rdf
 
+    from repro.core.query import ExecConfig, ServeQ
+
     ds = rdf.generate(4000, n_subjects=80, n_preds=16, n_objects=90, seed=9)
     store = k2triples.from_id_triples(
         ds.ids, n_so=ds.n_so, n_subjects=ds.n_subjects,
         n_objects=ds.n_objects, n_preds=ds.n_preds,
     )
     mesh = jax.make_mesh((1, 8), ("data", "model"))
-    f_sh = eng.shard_forest(eng.pad_preds(store.forest, 8), mesh, "model")
     T = set(map(tuple, ds.ids.tolist()))
-    serve = eng.make_sharded_serve_step(store.meta, mesh, cap=512)
+    plan = eng.Engine(store).compile(
+        ServeQ(unbounded=False), ExecConfig.from_env(cap=512, mesh=mesh)
+    )
     ids = ds.ids[:64]
     q = eng.ServeBatch(
         op=jnp.full((64,), 1, jnp.int32), s=jnp.asarray(ids[:, 0], jnp.int32),
         p=jnp.asarray(ids[:, 1], jnp.int32), o=jnp.asarray(ids[:, 2], jnp.int32),
     )
-    r = serve(f_sh, q)
+    r = plan(q)
     rids, valid = np.asarray(r.ids), np.asarray(r.valid)
     for i in range(64):
         s_, p_, _ = map(int, ids[i])

@@ -1,11 +1,21 @@
-"""Regression: the kernel-layer env flags must be re-read, not latched.
+"""Regression: the kernel-layer env flags must be re-read, not latched —
+and must never be read at all inside a compiled ``Plan`` path.
 
 The original ``kernels/ops.py`` captured ``REPRO_SCAN_BACKEND`` once into a
 module constant, so a test or notebook setting it after import was silently
 ignored; ``scan_backend()`` now consults the environment on every call.
 ``REPRO_PALLAS_INTERPRET`` had the same bug class (an ``INTERPRET`` module
 constant) — ``pallas_interpret()`` resolves it per call too.
+
+The inverse bug class arrived with the plan redesign: ``scan_backend()`` /
+``pallas_interpret()`` being consulted *inside* compiled paths whenever an
+``override is None`` slipped through the threading.  An ``ExecConfig``
+carries explicit values end to end, so a compiled ``Plan.__call__`` must
+perform ZERO ``os.environ`` reads — enforced below with an environment
+tripwire.
 """
+
+import os
 
 import numpy as np
 import pytest
@@ -58,6 +68,71 @@ def test_pallas_interpret_rereads_env(monkeypatch):
 def test_no_module_level_latch():
     """The latched constant is gone: the module exposes only the resolver."""
     assert not hasattr(ops, "INTERPRET")
+
+
+def test_resolve_exec_config_skips_env(monkeypatch):
+    """An ExecConfig-shaped object resolves without touching the env."""
+    from repro.core.query import ExecConfig
+
+    monkeypatch.setenv("REPRO_SCAN_BACKEND", "bogus")
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "bogus")
+    assert ops.resolve_exec(ExecConfig(backend="jnp", interpret=False)) == (
+        "jnp", False,
+    )
+    assert ops.resolve_exec(ExecConfig(backend="pallas", interpret=True)) == (
+        "pallas", True,
+    )
+    # interpret=None resolves deterministically from the jax backend
+    be, interp = ops.resolve_exec(ExecConfig(backend="pallas"))
+    assert (be, interp) == ("pallas", jax.default_backend() != "tpu")
+    # legacy strings still go through (and hit) the env validation
+    with pytest.raises(ValueError):
+        ops.resolve_exec(None)
+
+
+class _EnvTripwire(dict):
+    def get(self, k, d=None):
+        if str(k).startswith("REPRO_"):
+            raise AssertionError(
+                f"os.environ read of {k!r} inside a compiled Plan path"
+            )
+        return super().get(k, d)
+
+
+@pytest.mark.parametrize("backend", ["pallas", "jnp"])
+def test_no_env_read_inside_plan_call(monkeypatch, backend):
+    """The redesign bugfix regression: with an explicit ExecConfig, nothing
+    on ``Plan.__call__`` — pattern serve, unbounded lanes, joins, BGP —
+    consults the REPRO_* environment.  The env holds invalid values AND
+    ``kernels.ops`` sees a tripwire mapping, so any read fails loudly."""
+    from repro.core import engine as eng, k2triples
+    from repro.core.query import BgpQ, ExecConfig, JoinQ, TriplePatternQ
+    from repro.data import rdf
+
+    ds = rdf.generate(500, n_subjects=30, n_preds=4, n_objects=40, seed=23)
+    store = k2triples.from_id_triples(
+        ds.ids, n_so=ds.n_so, n_subjects=ds.n_subjects,
+        n_objects=ds.n_objects, n_preds=ds.n_preds,
+    )
+    T = set(map(tuple, ds.ids.tolist()))
+    E = eng.Engine(store)
+    cfg = ExecConfig(backend=backend, interpret=jax.default_backend() != "tpu",
+                     cap=128)
+    s_, p_, o_ = map(int, ds.ids[3])
+
+    monkeypatch.setenv("REPRO_SCAN_BACKEND", "bogus")
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "bogus")
+    monkeypatch.setattr(ops.os, "environ", _EnvTripwire(os.environ))
+
+    assert E.compile(TriplePatternQ(s_, p_, o_), cfg)() is True
+    assert E.compile(TriplePatternQ(s_, p_, "?o"), cfg)().tolist() == sorted(
+        oo for (ss, pp, oo) in T if ss == s_ and pp == p_
+    )
+    E.compile(TriplePatternQ(s_, "?p", "?o"), cfg)()  # unbounded + gather
+    E.compile(TriplePatternQ("?s", p_, "?o"), cfg)()  # pair enumeration
+    E.compile(JoinQ("A", "s", "s", p1=p_, c1=o_, p2=p_, c2=o_), cfg)()
+    E.compile(JoinQ("D", "s", "o", p1=p_, c1=o_, p2=p_), cfg)()  # rebind kernel
+    E.compile(BgpQ((TriplePatternQ(s_, "?p", "?o"),)), cfg)()
 
 
 def test_env_flip_switches_dispatch(monkeypatch):

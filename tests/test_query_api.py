@@ -1,0 +1,401 @@
+"""The compiled-plan query API: ``Query -> Engine.compile(ExecConfig) -> Plan``.
+
+Covers the redesign contracts:
+
+  * ``ExecConfig`` is frozen + hashable and keys the plan cache;
+  * plan-cache hit/miss semantics (same shape = hit, new shape/config =
+    miss; plans of one cache slot share growth state);
+  * cap-overflow recovery: the CapPolicy doubling loop equals a
+    brute-force oracle on an overflow-inducing store, on BOTH backends;
+  * quantile-sized unbounded lanes route degree outliers to the sweep
+    fallback and stay exact;
+  * the deprecation shims (``Engine.pattern`` / ``Engine.join`` /
+    ``optimizer.execute_bgp``) warn and return identical results.
+"""
+
+import warnings
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import engine as eng, k2triples, optimizer
+from repro.core.query import (
+    BgpQ, CapOverflow, CapPolicy, ExecConfig, JoinQ, Plan, ServeQ,
+    TriplePatternQ, shape_key,
+)
+from repro.data import rdf
+
+
+@pytest.fixture(scope="module")
+def store_and_truth():
+    ds = rdf.generate(
+        2500, n_subjects=50, n_preds=12, n_objects=70,
+        preds_per_subject=3, seed=17,
+    )
+    store = k2triples.from_id_triples(
+        ds.ids, n_so=ds.n_so, n_subjects=ds.n_subjects,
+        n_objects=ds.n_objects, n_preds=ds.n_preds,
+    )
+    return store, set(map(tuple, ds.ids.tolist())), ds
+
+
+# ---------------------------------------------------------------------------
+# ExecConfig
+# ---------------------------------------------------------------------------
+
+
+def test_exec_config_hashable_and_frozen():
+    import dataclasses
+
+    a = ExecConfig()
+    b = ExecConfig()
+    assert a == b and hash(a) == hash(b)
+    c = a.replace(cap=128)
+    assert c != a
+    d = {a: 1, c: 2}  # usable as a cache key directly
+    assert d[ExecConfig()] == 1
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        a.cap = 5
+    # nested CapPolicy participates in equality/hash
+    assert a.replace(cap_policy=CapPolicy(grow=False)) != a
+
+
+def test_exec_config_validation():
+    with pytest.raises(ValueError):
+        ExecConfig(backend="bogus")
+    with pytest.raises(ValueError):
+        ExecConfig(u_width_quantile=0.0)
+    with pytest.raises(ValueError):
+        ExecConfig(cap=0)
+
+
+def test_exec_config_from_env(monkeypatch):
+    monkeypatch.setenv("REPRO_SCAN_BACKEND", "jnp")
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "0")
+    cfg = ExecConfig.from_env(cap=99)
+    assert cfg.backend == "jnp" and cfg.interpret is False and cfg.cap == 99
+    # the snapshot is one-time: flipping the env does NOT change the config
+    monkeypatch.setenv("REPRO_SCAN_BACKEND", "pallas")
+    assert cfg.backend == "jnp"
+    assert cfg.resolved() is cfg  # interpret already concrete
+
+
+def test_query_shapes_and_validation():
+    assert shape_key(TriplePatternQ(1, 2, "?o")) == shape_key(
+        TriplePatternQ(7, 9, None)
+    )
+    assert shape_key(TriplePatternQ(1, 2, "?o")) != shape_key(
+        TriplePatternQ(1, "?p", 2)
+    )
+    with pytest.raises(ValueError):
+        JoinQ("Z", "s", "s")
+    with pytest.raises(ValueError):
+        JoinQ("A", "s", "s", p1=1, c1=1, p2=1)  # missing c2
+    with pytest.raises(ValueError):
+        JoinQ("A", "x", "s", p1=1, c1=1, p2=1, c2=1)
+
+
+# ---------------------------------------------------------------------------
+# plan cache
+# ---------------------------------------------------------------------------
+
+
+def test_plan_cache_hit_miss(store_and_truth):
+    store, T, ds = store_and_truth
+    E = eng.Engine(store)
+    cfg = ExecConfig(backend="jnp", cap=256)
+    s1, p1, o1 = map(int, ds.ids[0])
+    s2, p2, o2 = map(int, ds.ids[1])
+
+    plan1 = E.compile(TriplePatternQ(s1, p1, "?o"), cfg)
+    assert E.plan_cache_stats == {"hits": 0, "misses": 1, "size": 1}
+    # same shape, different constants -> HIT (constants are runtime inputs)
+    plan2 = E.compile(TriplePatternQ(s2, p2, "?o"), cfg)
+    assert E.plan_cache_stats["hits"] == 1
+    assert plan1._executor is plan2._executor
+    # different shape -> MISS
+    E.compile(TriplePatternQ("?s", p1, o1), cfg)
+    assert E.plan_cache_stats["misses"] == 2
+    # different config -> MISS
+    E.compile(TriplePatternQ(s1, p1, "?o"), cfg.replace(cap=512))
+    assert E.plan_cache_stats["misses"] == 3
+    # both plans answer correctly through the shared executor
+    assert plan1().tolist() == sorted(
+        oo for (ss, pp, oo) in T if ss == s1 and pp == p1
+    )
+    assert plan2().tolist() == sorted(
+        oo for (ss, pp, oo) in T if ss == s2 and pp == p2
+    )
+
+
+def test_plan_batched_execution(store_and_truth):
+    store, T, ds = store_and_truth
+    E = eng.Engine(store)
+    cfg = ExecConfig(backend="jnp", cap=256)
+    plan = E.compile(TriplePatternQ(1, 1, "?o"), cfg)
+    ids = ds.ids[:10]
+    outs = plan({"s": ids[:, 0], "p": ids[:, 1]})
+    assert len(outs) == 10
+    for i, out in enumerate(outs):
+        s_, p_ = int(ids[i, 0]), int(ids[i, 1])
+        assert out.tolist() == sorted(
+            oo for (ss, pp, oo) in T if ss == s_ and pp == p_
+        )
+    with pytest.raises(ValueError):
+        plan({"o": ids[:, 2]})  # o is not a bound position of this shape
+
+
+def test_repeated_variable_rejected_outside_bgp(store_and_truth):
+    store, _, _ = store_and_truth
+    E = eng.Engine(store)
+    with pytest.raises(ValueError):
+        E.compile(TriplePatternQ(1, "?x", "?x"))
+
+
+# ---------------------------------------------------------------------------
+# cap-overflow growth
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["pallas", "jnp"])
+def test_cap_growth_matches_oracle(store_and_truth, backend):
+    """cap=2 forces overflow on nearly every scan; the doubling policy must
+    recover the complete brute-force answer, and grow=False must raise."""
+    store, T, ds = store_and_truth
+    E = eng.Engine(store)
+    cfg = ExecConfig(
+        backend=backend, cap=2, cap_policy=CapPolicy(grow=True, max_doublings=12)
+    )
+    rng = np.random.default_rng(5)
+    for i in rng.integers(0, ds.n_triples, 4):
+        s_, p_, o_ = map(int, ds.ids[i])
+        plan = E.compile(TriplePatternQ(s_, p_, "?o"), cfg)
+        assert plan().tolist() == sorted(
+            oo for (ss, pp, oo) in T if ss == s_ and pp == p_
+        )
+        got = E.compile(TriplePatternQ(s_, None, None), cfg)()
+        exp = {}
+        for (ss, pp, oo) in T:
+            if ss == s_:
+                exp.setdefault(pp, []).append(oo)
+        assert {k: v.tolist() for k, v in got.items()} == {
+            k: sorted(v) for k, v in exp.items()
+        }
+    # a grown executor remembers its cap (> the configured 2)
+    assert E.compile(TriplePatternQ(1, 1, "?o"), cfg).effective_cap > 2
+
+    ungrown = ExecConfig(
+        backend=backend, cap=2, cap_policy=CapPolicy(grow=False)
+    )
+    from collections import Counter
+
+    (s_, p_), _ = Counter((s, p) for s, p, o in T).most_common(1)[0]
+    with pytest.raises(CapOverflow):
+        E.compile(TriplePatternQ(s_, p_, "?o"), ungrown)()
+
+
+@pytest.mark.parametrize("backend", ["pallas", "jnp"])
+def test_bgp_cap_growth_matches_oracle(store_and_truth, backend):
+    store, T, ds = store_and_truth
+    E = eng.Engine(store)
+    cfg = ExecConfig(
+        backend=backend, cap=4, cap_policy=CapPolicy(grow=True, max_doublings=12)
+    )
+    p_ = int(ds.ids[2][1])
+    q = BgpQ((
+        TriplePatternQ("?s", p_, "?o"),
+        TriplePatternQ("?o", "?p2", "?z"),
+    ))
+    got = E.compile(q, cfg)()
+    exp = {
+        (s, o, p2, z)
+        for (s, pp, o) in T
+        if pp == p_
+        for (s2, p2, z) in T
+        if s2 == o
+    }
+    rows = {
+        tuple(int(got[k][i]) for k in ("?s", "?o", "?p2", "?z"))
+        for i in range(len(got["?s"]))
+    }
+    assert rows == exp
+
+
+def test_bgp_anonymous_positions_projected(store_and_truth):
+    """``None`` positions are existential: internal placeholder names never
+    leak into the result, and the named columns are distinct rows."""
+    store, T, ds = store_and_truth
+    E = eng.Engine(store)
+    cfg = ExecConfig(backend="jnp", cap=512)
+    p_ = int(ds.ids[8][1])
+    got = E.compile(BgpQ((TriplePatternQ("?s", p_, None),)), cfg)()
+    assert set(got) == {"?s"}  # no ?__anon* keys
+    exp = sorted({s for (s, pp, o) in T if pp == p_})
+    assert sorted(got["?s"].tolist()) == exp  # distinct, no duplicates
+    # all-anonymous BGPs have no projectable columns -> explicit error
+    with pytest.raises(ValueError):
+        E.compile(BgpQ((TriplePatternQ(1, None, None),)), cfg)
+    # the internal prefix is reserved
+    with pytest.raises(ValueError):
+        E.compile(BgpQ((TriplePatternQ("?__anon0s", p_, None),)), cfg)
+
+
+# ---------------------------------------------------------------------------
+# quantile-sized unbounded lanes
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["pallas", "jnp"])
+def test_u_width_quantile_exact_with_outlier_fallback(store_and_truth, backend):
+    store, T, ds = store_and_truth
+    E = eng.Engine(store)
+    exact = ExecConfig(backend=backend, cap=512)
+    quant = exact.replace(u_width_quantile=0.5)
+    # the quantile width must actually prune vs the hub-driven max
+    assert E._u_width(quant) < E._u_width(exact)
+    rng = np.random.default_rng(9)
+    for i in rng.integers(0, ds.n_triples, 6):
+        s_, _, o_ = map(int, ds.ids[i])
+        for q in (TriplePatternQ(s_, None, None), TriplePatternQ(None, None, o_),
+                  TriplePatternQ(s_, None, o_)):
+            a = E.compile(q, exact)()
+            b = E.compile(q, quant)()
+            if isinstance(a, dict):
+                assert {k: v.tolist() for k, v in a.items()} == {
+                    k: v.tolist() for k, v in b.items()
+                }
+            else:
+                assert a.tolist() == b.tolist()
+
+
+def test_serveq_rejects_quantile(store_and_truth):
+    store, _, _ = store_and_truth
+    E = eng.Engine(store)
+    with pytest.raises(ValueError):
+        E.compile(ServeQ(), ExecConfig(u_width_quantile=0.5))
+
+
+def test_mesh_rejected_for_unsharded_shapes(store_and_truth):
+    """A mesh request must error, not silently run single-device, on the
+    shapes that have no sharded program (pair/dump, joins D-F, BGP)."""
+    import jax
+
+    store, _, _ = store_and_truth
+    E = eng.Engine(store)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    cfg = ExecConfig(mesh=mesh)
+    with pytest.raises(ValueError):
+        E.compile(TriplePatternQ("?s", 1, "?o"), cfg)  # pair enumeration
+    with pytest.raises(ValueError):
+        E.compile(TriplePatternQ(), cfg)  # dump
+    with pytest.raises(ValueError):
+        E.compile(JoinQ("D", "s", "o", p1=1, c1=1, p2=1), cfg)
+    with pytest.raises(ValueError):
+        E.compile(BgpQ((TriplePatternQ(1, "?p", "?o"),)), cfg)
+    with pytest.raises(ValueError):
+        plan = E.compile(TriplePatternQ(1, 1, "?o"), ExecConfig())
+        plan({})  # empty batch is a misuse, not a crash
+
+
+# ---------------------------------------------------------------------------
+# ServeQ raw passthrough
+# ---------------------------------------------------------------------------
+
+
+def test_serveq_matches_reference(store_and_truth):
+    store, T, ds = store_and_truth
+    E = eng.Engine(store)
+    rng = np.random.default_rng(3)
+    B = 32
+    ops = rng.integers(0, 6, B).astype(np.int32)
+    ids = ds.ids[rng.integers(0, ds.n_triples, B)]
+    q = eng.ServeBatch(
+        op=jnp.asarray(ops),
+        s=jnp.asarray(ids[:, 0], jnp.int32),
+        p=jnp.asarray(np.where(ops >= 3, 0, ids[:, 1]), jnp.int32),
+        o=jnp.asarray(ids[:, 2], jnp.int32),
+    )
+    cfg = ExecConfig(backend="jnp", cap=256)
+    r = E.compile(ServeQ(), cfg)(q)
+    bi = store.pred_index
+    ref = eng.make_serve_step(store.meta, cap=256, backend=cfg, pmeta=bi.meta)(
+        store.forest, q, bi.device
+    )
+    for name, a, b in zip(r._fields, r, ref):
+        assert (np.asarray(a) == np.asarray(b)).all(), name
+    with pytest.raises(ValueError):
+        E.compile(ServeQ(), cfg)()  # a ServeQ plan needs a batch
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims
+# ---------------------------------------------------------------------------
+
+
+def test_engine_pattern_shim_warns_and_matches(store_and_truth):
+    store, T, ds = store_and_truth
+    E = eng.Engine(store, cap=512, backend="jnp")
+    s_, p_, o_ = map(int, ds.ids[4])
+    cfg = ExecConfig(backend="jnp", cap=512)
+    cases = [
+        (s_, p_, o_), (s_, p_, None), (None, p_, o_), (s_, None, o_),
+        (s_, None, None), (None, None, o_), (None, p_, None),
+    ]
+    for c in cases:
+        with pytest.warns(DeprecationWarning):
+            legacy = E.pattern(*c)
+        new = E.compile(
+            TriplePatternQ(*(t if t else None for t in c)), cfg
+        )()
+        if isinstance(legacy, bool):
+            assert legacy == new
+        elif isinstance(legacy, dict):
+            assert {k: np.asarray(v).tolist() for k, v in legacy.items()} == {
+                k: np.asarray(v).tolist() for k, v in new.items()
+            }
+        else:
+            assert np.asarray(legacy).tolist() == np.asarray(new).tolist()
+
+
+def test_engine_join_shim_warns_and_matches(store_and_truth):
+    store, T, ds = store_and_truth
+    E = eng.Engine(store, cap=512, backend="jnp")
+    p1, o1 = int(ds.ids[0][1]), int(ds.ids[0][2])
+    p2, o2 = int(ds.ids[1][1]), int(ds.ids[1][2])
+    cfg = ExecConfig(backend="jnp", cap=512, cap_y=256)
+    with pytest.warns(DeprecationWarning):
+        legacy = E.join("A", p1=p1, c1=o1, vpos1="s", p2=p2, c2=o2, vpos2="s")
+    new = E.compile(JoinQ("A", "s", "s", p1=p1, c1=o1, p2=p2, c2=o2), cfg)()
+    assert legacy.tolist() == new.tolist()
+    # the legacy per-call backend= override must keep working in the shim
+    with pytest.warns(DeprecationWarning):
+        legacy_be = E.join(
+            "A", p1=p1, c1=o1, vpos1="s", p2=p2, c2=o2, vpos2="s",
+            backend="jnp",
+        )
+    assert legacy_be.tolist() == new.tolist()
+    with pytest.warns(DeprecationWarning):
+        legacy = E.join("E", p1=p1, c1=o1, vpos1="s", vpos2="o")
+    new = E.compile(JoinQ("E", "s", "o", p1=p1, c1=o1), cfg)()
+    assert {
+        k: {kk: vv.tolist() for kk, vv in v.items()} for k, v in legacy.items()
+    } == {
+        k: {kk: vv.tolist() for kk, vv in v.items()} for k, v in new.items()
+    }
+
+
+def test_execute_bgp_shim_warns_and_matches(store_and_truth):
+    store, T, ds = store_and_truth
+    E = eng.Engine(store)
+    p_ = int(ds.ids[6][1])
+    pats = [optimizer.TriplePattern("?s", p_, "?o")]
+    with pytest.warns(DeprecationWarning):
+        legacy = optimizer.execute_bgp(store, pats, cap=512)
+    new = E.compile(
+        BgpQ((TriplePatternQ("?s", p_, "?o"),)),
+        ExecConfig(backend="jnp", cap=512),
+    )()
+    assert {k: sorted(v.tolist()) for k, v in legacy.items()} == {
+        k: sorted(v.tolist()) for k, v in new.items()
+    }
