@@ -1,0 +1,51 @@
+"""Serving benchmark rows: the streaming multi-tenant broker under a
+Zipf-skewed mixed-op trace (sustained queries/sec + per-query tails).
+
+Single-device always; a predicate-sharded row rides along whenever more
+than one device is visible (CI fakes 8 hosts via
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``).  A requested-but-
+impossible sharded run is reported as a skip, never silently downgraded
+to single-device numbers — that is the bug class this PR removes.
+"""
+
+from __future__ import annotations
+
+from repro.launch import serve
+
+CSV_HEADER = (
+    "mode,backend,devices,queries,qps,p50_ms,p99_ms,coalesce,shed,cap_growths"
+)
+
+_FAST = dict(
+    n_triples=20_000, n_preds=16, n_tenants=4, n_queries=256,
+    cap=256, max_batch=64, warmup=32,
+)
+_FULL = dict(
+    n_triples=100_000, n_preds=64, n_tenants=8, n_queries=4096,
+    cap=1024, max_batch=256, warmup=64,
+)
+
+
+def run(*, fast: bool = False, backend: str | None = None) -> list[dict]:
+    """One row single-device, plus one sharded row when devices allow."""
+    import jax
+
+    kw = dict(_FAST if fast else _FULL, backend=backend, quiet=True)
+    rows = [serve.run_bench(**kw)]
+    if len(jax.devices()) > 1:
+        rows.append(serve.run_bench(**kw, sharded=True))
+    else:
+        print("# sharded serving row skipped: one device visible "
+              "(set XLA_FLAGS=--xla_force_host_platform_device_count=N)")
+    return rows
+
+
+def format_row(row: dict) -> str:
+    def pct(v):
+        return f"{v:.2f}" if v is not None else "n/a"
+
+    return (
+        f"{row['mode']},{row['backend']},{row['devices']},{row['queries']},"
+        f"{row['qps']:.0f},{pct(row['p50_ms'])},{pct(row['p99_ms'])},"
+        f"{row['coalesce_factor']:.1f},{row['shed']},{row['cap_growth_events']}"
+    )

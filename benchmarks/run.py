@@ -35,7 +35,10 @@ def main() -> None:
     )
     args = ap.parse_args()
 
-    from benchmarks import bench_compression, bench_joins, bench_kernels, bench_patterns
+    from benchmarks import (
+        bench_compression, bench_joins, bench_kernels, bench_patterns,
+        bench_serve,
+    )
 
     results: dict = {"fast": bool(args.fast)}
     t0 = time.time()
@@ -89,6 +92,14 @@ def main() -> None:
     for k, v in joins.items():
         print(f"{k},{v:.2f}")
     results["joins"] = joins
+
+    print("=" * 72)
+    print("# Serving: streaming multi-tenant broker (Zipf trace, mixed ops)")
+    print(bench_serve.CSV_HEADER)
+    srows = bench_serve.run(fast=args.fast)
+    for r in srows:
+        print(bench_serve.format_row(r))
+    results["serving"] = srows
 
     print("=" * 72)
     print("# kernel microbenches (cpu ref timings + TPU roofline analytics)")

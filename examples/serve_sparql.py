@@ -1,10 +1,11 @@
-"""Serve batched SPARQL triple patterns from a compressed in-memory store.
+"""Serve SPARQL triple patterns from a compressed in-memory store.
 
     PYTHONPATH=src python examples/serve_sparql.py --triples 100000
 
-Builds a synthetic store (paper Table 1 ratios), compiles the batched
-serve step once, then streams mixed query batches through it — the paper's
-"full-in-memory RDF engine" as a production serving loop.
+Builds a synthetic store (paper Table 1 ratios), compiles one batched
+serve plan, then replays a skewed multi-tenant query trace through the
+streaming broker (`repro.launch.broker`) — the paper's "full-in-memory
+RDF engine" as a production serving loop.
 """
 
 import argparse

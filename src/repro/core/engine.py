@@ -103,6 +103,63 @@ class ServeResult(NamedTuple):
     u_count: jax.Array  # int32[B,L]
 
 
+def take_lanes(q: ServeBatch, idx) -> ServeBatch:
+    """Split a batch: the sub-``ServeBatch`` of lanes ``idx`` (any numpy
+    fancy index).  The streamed-serving splitting hook — brokers carve
+    per-tenant retry batches out of a coalesced one without re-encoding."""
+    idx = np.asarray(idx)
+    return ServeBatch(*(np.asarray(a)[idx] for a in q))
+
+
+def host_result(r: ServeResult, *, unbounded: bool = True) -> ServeResult:
+    """ONE blocking device->host fetch of a ``ServeResult`` (numpy fields).
+
+    This is where a streamed decode pays its sync; calling it on batch N
+    after submitting batch N+1 (``Plan.submit``) is the double-buffering
+    pattern.  ``unbounded=False`` skips the ``u_*`` block — by far the
+    largest transfer (``[B, L, cap]``) — for batches the caller knows
+    carry no unbounded-``?P`` lanes.
+    """
+    jax.block_until_ready(r.ids)
+    b = r.ids.shape[0]
+    if unbounded:
+        return ServeResult(*(np.asarray(a) for a in r))
+    return ServeResult(
+        hit=np.asarray(r.hit), ids=np.asarray(r.ids),
+        valid=np.asarray(r.valid), count=np.asarray(r.count),
+        overflow=np.asarray(r.overflow),
+        u_preds=np.zeros((b, 0), np.int32),
+        u_ids=np.zeros((b, 0, r.ids.shape[1]), np.int32),
+        u_valid=np.zeros((b, 0, r.ids.shape[1]), np.bool_),
+        u_count=np.zeros((b, 0), np.int32),
+    )
+
+
+def decode_lane(op: int, r: ServeResult, i: int):
+    """Decode ONE lane of a host-side ``ServeResult`` into its python-level
+    answer (the per-op shapes ``_PatternExec._decode`` returns):
+
+      OP_CHECK -> bool;  OP_ROW / OP_COL -> sorted id array;
+      OP_S_ANY_O -> matching predicate id array;
+      OP_S_ANY_ANY / OP_ANY_ANY_O -> {pred id: id array}.
+
+    Lane-at-a-time is the streaming decode unit: a broker resolves each
+    tenant's queries as their lanes decode instead of materializing a
+    batch-level result object.
+    """
+    if op == OP_CHECK:
+        return bool(r.hit[i])
+    if op in (OP_ROW, OP_COL, OP_S_ANY_O):
+        return r.ids[i][r.valid[i]]
+    if op in (OP_S_ANY_ANY, OP_ANY_ANY_O):
+        return {
+            int(r.u_preds[i, l]): r.u_ids[i, l][r.u_valid[i, l]]
+            for l in range(r.u_preds.shape[1])
+            if r.u_preds[i, l] and r.u_valid[i, l].any()
+        }
+    raise ValueError(f"not a decodable serve op: {op}")
+
+
 def _u_candidates(
     q: ServeBatch, f: K2Forest, u_width: int,
     index: PredIndex | None, pmeta: PredIndexMeta | None,
@@ -517,6 +574,12 @@ class _ExecBase:
         )
         return out
 
+    def submit(self, q, batch):
+        raise NotImplementedError(
+            f"{type(self).__name__} has no raw device surface; "
+            "Plan.submit is a ServeQ-only streaming hook"
+        )
+
     def compiled_text(self, q, batch):
         raise NotImplementedError(f"{type(self).__name__} has no HLO view")
 
@@ -632,21 +695,8 @@ class _PatternExec(_ExecBase):
 
     @staticmethod
     def _decode(op, r, idxs):
-        if op == OP_CHECK:
-            hit = np.asarray(r.hit)
-            return [bool(hit[i]) for i in idxs]
-        if op in (OP_ROW, OP_COL, OP_S_ANY_O):
-            ids, valid = np.asarray(r.ids), np.asarray(r.valid)
-            return [ids[i][valid[i]] for i in idxs]
-        up, ui, uv = (np.asarray(a) for a in (r.u_preds, r.u_ids, r.u_valid))
-        return [
-            {
-                int(up[i, l]): ui[i, l][uv[i, l]]
-                for l in range(up.shape[1])
-                if up[i, l] and uv[i, l].any()
-            }
-            for i in idxs
-        ]
+        h = jax.tree.map(np.asarray, r)
+        return [decode_lane(op, h, i) for i in idxs]
 
     def _run_pairs(self, p, b, cap):
         eng = self.engine
@@ -818,11 +868,16 @@ class _BgpExec(_ExecBase):
 class _ServeExec(_ExecBase):
     """Raw serve-IR passthrough: ``plan(ServeBatch) -> ServeResult``."""
 
-    def run(self, q: ServeQ, batch):
+    @staticmethod
+    def _coerce(batch):
         if batch is None:
             raise ValueError("ServeQ plans take a ServeBatch")
         if not isinstance(batch, ServeBatch):
             batch = ServeBatch(*(jnp.asarray(a, jnp.int32) for a in batch))
+        return batch
+
+    def run(self, q: ServeQ, batch):
+        batch = self._coerce(batch)
 
         def fn(cap, _):
             r = self._call(batch, cap, q.unbounded)
@@ -830,6 +885,14 @@ class _ServeExec(_ExecBase):
             return r
 
         return self._grow(fn)
+
+    def submit(self, q: ServeQ, batch) -> ServeResult:
+        """Streamed-serving dispatch: device ``ServeResult`` with NO host
+        sync — the overflow guard and any cap growth are the caller's job
+        (``launch.broker`` handles both per tenant).  The executor's cap
+        never grows through this path, so a shared base plan stays at its
+        configured geometry no matter what overflows ride through it."""
+        return self._call(self._coerce(batch), self.cap, q.unbounded)
 
     def _args(self, qb, cap, unbounded):
         eng, cfg = self.engine, self.cfg
@@ -933,18 +996,29 @@ class Engine:
 
     # -- compile -------------------------------------------------------
 
-    def compile(self, q, config: ExecConfig | None = None) -> Plan:
+    def compile(self, q, config: ExecConfig | None = None, *, admit=None) -> Plan:
         """Lower ``q`` under ``config`` (default :attr:`default_config`).
 
         Plans are cached on ``(shape_key, config)``: the constants inside
         ``q`` are runtime inputs, so compiling a second query of the same
         shape is a cache hit.
+
+        ``admit`` is the plan-cache admission hook: a callable invoked with
+        the cache key ONLY on a miss; returning falsy raises
+        :class:`~repro.core.query.AdmissionError` instead of compiling.
+        Hits bypass it entirely — admission charges the expensive event
+        (a new compiled executor), never the reuse of a shared one.  The
+        multi-tenant broker uses this to budget per-tenant recompiles.
         """
         cfg = (config or self.default_config).resolved()
         self._validate(q, cfg)
         key = (qapi.shape_key(q), cfg)
         ex = self._plan_cache.get(key)
         if ex is None:
+            if admit is not None and not admit(key):
+                raise qapi.AdmissionError(
+                    f"plan-cache admission denied for {key[0]!r}"
+                )
             self._stats["misses"] += 1
             ex = self._build_executor(q, cfg)
             self._plan_cache[key] = ex

@@ -67,6 +67,14 @@ class CapOverflow(RuntimeError):
     catching the old truncation errors keep working."""
 
 
+class AdmissionError(RuntimeError):
+    """Plan-cache admission denied: compiling this plan would exceed the
+    caller's budget.  Raised by ``Engine.compile(..., admit=fn)`` when the
+    ``admit`` callback vetoes a cache MISS — cache hits are never charged,
+    so shared already-compiled programs stay free.  The multi-tenant serve
+    broker translates per-tenant plan quotas into this."""
+
+
 def default_interpret() -> bool:
     """The ONE definition of the auto interpret default: Pallas interpret
     mode everywhere except a real TPU backend.  Deterministic — consulted
@@ -165,9 +173,14 @@ class ExecConfig:
         if "backend" not in overrides:
             overrides["backend"] = os.environ.get("REPRO_SCAN_BACKEND", "pallas")
         if "interpret" not in overrides:
+            # tri-state: unset -> auto (default_interpret), "0" -> force
+            # compiled, anything else -> force interpret.  The pre-fix
+            # expression (`env != "0" and default_interpret()`) collapsed
+            # an explicit "1" into the auto default, silently ignoring it
+            # on TPU backends where the default is False.
+            raw = os.environ.get("REPRO_PALLAS_INTERPRET")
             overrides["interpret"] = (
-                os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
-                and default_interpret()
+                default_interpret() if raw is None else raw != "0"
             )
         return cls(**overrides)
 
@@ -345,6 +358,15 @@ class Plan:
 
     def __call__(self, batch=None):
         return self._executor.run(self.query, batch)
+
+    def submit(self, batch=None):
+        """Asynchronous dispatch: launch the compiled program and return its
+        DEVICE results immediately — no host sync, no overflow guard, no
+        CapPolicy growth.  The streamed-serving hook: a caller (the
+        ``launch.broker`` front-end) can overlap host-side decode of batch N
+        with device execution of batch N+1, inspecting ``overflow`` itself.
+        Only executors with a raw device surface support it (``ServeQ``)."""
+        return self._executor.submit(self.query, batch)
 
     @property
     def effective_cap(self) -> int:

@@ -1,0 +1,544 @@
+"""Streaming multi-tenant serve broker over compiled ``ServeQ`` plans.
+
+The production front-end the ROADMAP north star asks for: many tenants
+submit single queries as async streams; the broker coalesces them into
+mixed-op ``ServeBatch``es under a deadline/size policy, double-buffers
+host-side decode against device serve, and streams each tenant's results
+back the moment its lanes decode — no batch-level result object is ever
+materialized for callers.
+
+    broker = ServeBroker(engine, ExecConfig(cap=512))
+    async with broker:
+        objs = await broker.submit("tenant-a", eng.OP_ROW, s=12, p=3)
+
+Pipeline (one background task)::
+
+    submit() ──▶ global FIFO ──▶ coalesce (deadline/size) ──▶ Plan.submit
+                                                              (device, async)
+         futures ◀── per-lane streamed decode ◀── host_result ◀─┘
+                     (batch N decodes while batch N+1 runs on device)
+
+Isolation properties
+--------------------
+
+* **The shared base plan never grows.**  Dispatch rides ``Plan.submit`` —
+  the raw device path with no CapPolicy growth — so one tenant's
+  overflowing queries cannot recompile (or widen) the program every other
+  tenant is served by.
+* **Cap growth is per tenant and budgeted.**  Lanes whose ``overflow`` bit
+  is set are retried on doubled-cap plans compiled under that tenant's
+  :class:`TenantPolicy` budget (``max_cap_doublings``); a tenant that
+  exhausts its budget gets :class:`~repro.core.query.CapOverflow` on that
+  query while everyone else proceeds at base cap.
+* **Plan-cache admission is quota'd.**  Every retry cap level is a plan
+  the engine must compile; ``Engine.compile(admit=...)`` charges the
+  tenant's ``max_plans`` quota on cache MISSES only — plans another tenant
+  already compiled are shared free of charge — and denial surfaces as
+  :class:`~repro.core.query.AdmissionError` on the offending query.
+
+Back-pressure (the shed policy)
+-------------------------------
+
+Per-tenant queues are bounded at ``TenantPolicy.queue_depth`` *accepted
+but unresolved* requests.  The policy is **shed-newest, fail-fast**: a
+submit over the bound raises :class:`QueueFull` immediately (counted in
+``stats()``) and nothing already accepted is ever dropped — so a flooding
+tenant sees its own rejections synchronously while other tenants' queues
+and latency are untouched.
+
+Ordering
+--------
+
+Per-tenant FIFO: results resolve in submission order.  Batches decode in
+dispatch order, lanes decode in lane order, and a tenant with a retried
+(overflowed) lane has its later lanes in that batch held until the retry
+lands — so growth never reorders a stream.
+
+Stats
+-----
+
+``stats()`` returns a structured dict: global and per-tenant query
+latency percentiles (``p50_ms``/``p99_ms`` via :func:`tail_percentile`,
+which refuses sample counts that cannot support a tail quantile), queue
+depth + peak, coalesce factor, flush-reason counts, shed counts, and
+cap-growth / admission-denial events.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import collections
+import dataclasses
+import math
+import time
+
+import numpy as np
+
+from repro.core import engine as eng
+from repro.core.query import (
+    AdmissionError, CapOverflow, CapPolicy, ExecConfig, ServeQ,
+)
+
+__all__ = [
+    "CoalescePolicy", "TenantPolicy", "QueueFull", "ServeBroker",
+    "tail_percentile",
+]
+
+
+class QueueFull(RuntimeError):
+    """Shed signal: the tenant's bounded queue is at ``queue_depth``.
+
+    Raised synchronously by ``submit``/``submit_nowait`` (shed-newest,
+    fail-fast — see the module docstring); the request was NOT enqueued.
+    """
+
+
+@dataclasses.dataclass(frozen=True)
+class CoalescePolicy:
+    """When pending requests flush into a device batch.
+
+    A batch dispatches when ``max_batch`` requests are pending OR the
+    oldest pending request has waited ``max_delay_s`` — whichever comes
+    first.  Batches are padded to ``max_batch`` with dead (op = -1) lanes
+    so every dispatch hits ONE compiled program geometry (no retraces).
+    ``max_inflight`` bounds device batches awaiting decode; 2 is the
+    double-buffer: batch N decodes on host while N+1 runs on device.
+    """
+
+    max_batch: int = 256
+    max_delay_s: float = 2e-3
+    max_inflight: int = 2
+
+    def __post_init__(self):
+        if self.max_batch < 1 or self.max_inflight < 1:
+            raise ValueError("max_batch and max_inflight must be >= 1")
+        if self.max_delay_s < 0:
+            raise ValueError("max_delay_s must be >= 0")
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantPolicy:
+    """Per-tenant admission + back-pressure budgets (one policy, applied
+    to every tenant; tenants are created on first submit).
+
+    ``queue_depth``
+        Accepted-but-unresolved request bound; beyond it submissions shed
+        (:class:`QueueFull`).
+    ``max_cap_doublings``
+        Cap-growth budget: how many times this tenant's overflowing
+        queries may double the retry cap above the broker's base cap.
+    ``max_plans``
+        Plan-cache quota: how many plan-cache MISSES (new compiled
+        programs — one per distinct retry cap level) the tenant may
+        charge.  Shared cache hits are free.
+    """
+
+    queue_depth: int = 1024
+    max_cap_doublings: int = 4
+    max_plans: int = 4
+
+    def __post_init__(self):
+        if self.queue_depth < 1:
+            raise ValueError("queue_depth must be >= 1")
+        if self.max_cap_doublings < 0 or self.max_plans < 0:
+            raise ValueError("budgets must be >= 0")
+
+
+def tail_percentile(samples, q: float) -> float | None:
+    """``np.percentile`` guarded by sample count: ``None`` unless there are
+    at least ``ceil(100 / (100 - q))`` samples — the minimum for the q-th
+    percentile to be interpolated between order statistics rather than
+    being a relabeled maximum (p99 needs 100 samples, p50 needs 2)."""
+    n = len(samples)
+    if not 0 <= q < 100:
+        raise ValueError(f"q must be in [0, 100), got {q}")
+    need = max(1, math.ceil(100.0 / (100.0 - q)))
+    if n < need:
+        return None
+    return float(np.percentile(np.asarray(samples), q))
+
+
+@dataclasses.dataclass
+class _Req:
+    tenant: str
+    op: int
+    s: int
+    p: int
+    o: int
+    t_submit: float
+    future: asyncio.Future
+
+
+@dataclasses.dataclass
+class _TenantState:
+    name: str
+    pending: int = 0  # accepted, not yet resolved
+    shed: int = 0
+    completed: int = 0
+    failed: int = 0
+    cap_level: int = 0  # highest doubling level this tenant reached
+    plans_charged: int = 0  # plan-cache misses charged against max_plans
+    cap_growth_events: int = 0
+    admission_denials: int = 0
+    lat_s: list = dataclasses.field(default_factory=list)
+
+
+class ServeBroker:
+    """Async multi-tenant request broker over one ``Engine``.
+
+    Use as an async context manager (or ``start()`` / ``aclose()``)::
+
+        async with ServeBroker(engine, cfg) as broker:
+            hit = await broker.submit("t0", eng.OP_CHECK, s, p, o)
+
+    ``unbounded=False`` compiles the ``u_*`` block out of the base plan —
+    a broker serving only CHECK/ROW/COL traffic never pays for it (and
+    the decode fetch skips the ``[B, L, cap]`` transfer either way when a
+    batch carries no unbounded lanes).
+    """
+
+    def __init__(
+        self,
+        engine: eng.Engine,
+        config: ExecConfig | None = None,
+        *,
+        unbounded: bool = True,
+        coalesce: CoalescePolicy = CoalescePolicy(),
+        tenant_policy: TenantPolicy = TenantPolicy(),
+    ):
+        self.engine = engine
+        cfg = (config or engine.default_config).resolved()
+        # growth is broker-managed (per tenant); the base plan must never
+        # self-heal behind the broker's back
+        self.config = cfg.replace(cap_policy=CapPolicy(grow=False))
+        self.coalesce = coalesce
+        self.tenant_policy = tenant_policy
+        self.unbounded = unbounded
+        self._query = ServeQ(unbounded=unbounded)
+        self.base_plan = engine.compile(self._query, self.config)
+        # data-axis divisibility for sharded dispatch geometries
+        self._pad_to = self._padded_batch(coalesce.max_batch)
+
+        self._queue: collections.deque[_Req] = collections.deque()
+        self._inflight: collections.deque = collections.deque()
+        self._tenants: dict[str, _TenantState] = {}
+        self._wake: asyncio.Event | None = None
+        self._task: asyncio.Task | None = None
+        self._draining = False
+        self._running = False
+        self._stats = collections.Counter()
+        self._queue_peak = 0
+
+    # -- lifecycle ------------------------------------------------------
+
+    async def __aenter__(self) -> "ServeBroker":
+        await self.start()
+        return self
+
+    async def __aexit__(self, *exc):
+        await self.aclose()
+
+    async def start(self) -> None:
+        if self._running:
+            raise RuntimeError("broker already started")
+        self._wake = asyncio.Event()
+        self._draining = False
+        self._running = True
+        self._task = asyncio.get_running_loop().create_task(self._run())
+
+    async def aclose(self) -> None:
+        """Drain: serve everything accepted, then stop the loop."""
+        if not self._running:
+            return
+        self._draining = True
+        self._wake.set()
+        await self._task
+        self._running = False
+
+    # -- submission -----------------------------------------------------
+
+    def submit_nowait(self, tenant: str, op: int, s: int = 0, p: int = 0,
+                      o: int = 0) -> asyncio.Future:
+        """Enqueue one query; the future resolves to its decoded answer
+        (see ``engine.decode_lane`` for per-op shapes).  Raises
+        :class:`QueueFull` when the tenant's queue is at ``queue_depth``
+        (the shed policy) and ``RuntimeError`` when the broker is not
+        accepting."""
+        if not self._running or self._draining:
+            raise RuntimeError("broker is not accepting requests")
+        st = self._tenant(tenant)
+        if st.pending >= self.tenant_policy.queue_depth:
+            st.shed += 1
+            self._stats["shed"] += 1
+            raise QueueFull(
+                f"tenant {tenant!r} at queue_depth="
+                f"{self.tenant_policy.queue_depth}; shed-newest"
+            )
+        st.pending += 1
+        fut = asyncio.get_running_loop().create_future()
+        self._queue.append(
+            _Req(tenant, int(op), int(s), int(p), int(o),
+                 time.perf_counter(), fut)
+        )
+        self._queue_peak = max(self._queue_peak, len(self._queue))
+        self._wake.set()
+        return fut
+
+    async def submit(self, tenant: str, op: int, s: int = 0, p: int = 0,
+                     o: int = 0):
+        return await self.submit_nowait(tenant, op, s, p, o)
+
+    async def stream(self, tenant: str, queries):
+        """Submit a tenant's query stream, yielding results in submission
+        order.  ``queries`` is an iterable of ``(op, s, p, o)``.  The
+        whole stream is admitted through the same bounded queue — a
+        :class:`QueueFull` shed propagates to the caller mid-stream."""
+        window: collections.deque[asyncio.Future] = collections.deque()
+        for (op, s, p, o) in queries:
+            while window and window[0].done():
+                yield await window.popleft()
+            # stay inside the tenant's queue bound: wait for the oldest
+            # outstanding result instead of shedding our own stream
+            while (
+                window
+                and self._tenant(tenant).pending >= self.tenant_policy.queue_depth
+            ):
+                yield await window.popleft()
+            window.append(self.submit_nowait(tenant, op, s, p, o))
+        while window:
+            yield await window.popleft()
+
+    # -- the serve loop -------------------------------------------------
+
+    async def _run(self):
+        while True:
+            if len(self._inflight) >= self.coalesce.max_inflight:
+                await self._deliver(*self._inflight.popleft())
+                continue
+            reqs = await self._collect(block=not self._inflight)
+            if reqs:
+                self._dispatch(reqs)
+            elif self._inflight:
+                await self._deliver(*self._inflight.popleft())
+            elif self._draining and not self._queue:
+                return
+
+    async def _collect(self, *, block: bool) -> list[_Req]:
+        pol = self.coalesce
+        while not self._queue:
+            if not block or self._draining:
+                return []
+            self._wake.clear()
+            await self._wake.wait()
+        # deadline of the OLDEST pending request governs the flush
+        deadline = self._queue[0].t_submit + pol.max_delay_s
+        while len(self._queue) < pol.max_batch and not self._draining:
+            now = time.perf_counter()
+            if now >= deadline:
+                break
+            self._wake.clear()
+            try:
+                await asyncio.wait_for(self._wake.wait(), deadline - now)
+            except asyncio.TimeoutError:
+                break
+        if len(self._queue) >= pol.max_batch:
+            self._stats["flush_size"] += 1
+        elif self._draining:
+            self._stats["flush_drain"] += 1
+        else:
+            self._stats["flush_deadline"] += 1
+        n = min(len(self._queue), pol.max_batch)
+        return [self._queue.popleft() for _ in range(n)]
+
+    def _dispatch(self, reqs: list[_Req]):
+        qb = self._encode(reqs, self._pad_to)
+        raw = self.base_plan.submit(qb)  # async device dispatch, no sync
+        self._inflight.append((raw, reqs))
+        self._stats["batches"] += 1
+        self._stats["lanes"] += len(reqs)
+
+    def _encode(self, reqs: list[_Req], pad_to: int) -> eng.ServeBatch:
+        n = max(pad_to, self._padded_batch(len(reqs)))
+        op = np.full(n, -1, np.int32)  # dead lanes: masked to zero output
+        s = np.zeros(n, np.int32)
+        p = np.zeros(n, np.int32)
+        o = np.zeros(n, np.int32)
+        for i, r in enumerate(reqs):
+            op[i], s[i], p[i], o[i] = r.op, r.s, r.p, r.o
+        return eng.ServeBatch(op=op, s=s, p=p, o=o)
+
+    def _padded_batch(self, b: int) -> int:
+        """pow2 bucket (>= 8), then data-axis divisibility when sharded."""
+        n = 8
+        while n < b:
+            n <<= 1
+        cfg = self.config
+        if cfg.mesh is not None:
+            d = int(np.prod([cfg.mesh.shape[a] for a in cfg.data_axes]))
+            n = ((max(n, d) + d - 1) // d) * d
+        return n
+
+    # -- streamed decode + per-tenant growth ----------------------------
+
+    async def _deliver(self, raw, reqs: list[_Req]):
+        has_u = any(r.op in eng._UNBOUNDED_OPS for r in reqs)
+        # the blocking device->host fetch runs off-loop so submitters keep
+        # filling the next batch while this one decodes
+        host = await asyncio.to_thread(
+            eng.host_result, raw, unbounded=has_u and self.unbounded
+        )
+        retry_tenants = {
+            reqs[i].tenant
+            for i in np.nonzero(host.overflow[: len(reqs)])[0]
+        }
+        for i, r in enumerate(reqs):
+            # streamed delivery: every lane of an unaffected tenant
+            # resolves here, before any retry work happens
+            if r.tenant not in retry_tenants:
+                self._resolve(r, eng.decode_lane(r.op, host, i))
+        for tenant in sorted(retry_tenants):
+            # per-tenant FIFO: the whole segment of a tenant with a
+            # retried lane is held and re-released in submission order
+            segment = [(i, r) for i, r in enumerate(reqs) if r.tenant == tenant]
+            await self._retry_tenant(tenant, segment, host)
+
+    def _resolve(self, r: _Req, value):
+        st = self._tenants[r.tenant]
+        st.pending -= 1
+        st.completed += 1
+        st.lat_s.append(time.perf_counter() - r.t_submit)
+        if not r.future.cancelled():
+            r.future.set_result(value)
+
+    def _fail(self, r: _Req, exc: BaseException):
+        st = self._tenants[r.tenant]
+        st.pending -= 1
+        st.failed += 1
+        if not r.future.cancelled():
+            r.future.set_exception(exc)
+
+    async def _retry_tenant(self, tenant, segment, host):
+        """Re-run a tenant's overflowed lanes on doubled-cap plans, then
+        release its held segment in submission order."""
+        grow = [(i, r) for (i, r) in segment if bool(host.overflow[i])]
+        try:
+            done = await asyncio.to_thread(
+                self._grow_and_run, tenant, [r for (_, r) in grow]
+            )
+            regrown, err = dict(zip((i for i, _ in grow), done)), None
+        except (CapOverflow, AdmissionError) as e:
+            regrown, err = {}, e
+        for i, r in segment:
+            if i in regrown:
+                self._resolve(r, regrown[i])
+            elif err is not None and bool(host.overflow[i]):
+                self._fail(r, err)
+            else:
+                self._resolve(r, eng.decode_lane(r.op, host, i))
+
+    def _grow_and_run(self, tenant: str, rs: list[_Req]):
+        """Blocking (off-loop) escalation: double the cap from the tenant's
+        remembered level until the lanes fit or the budget runs out."""
+        st = self._tenants[tenant]
+        pol = self.tenant_policy
+        level = max(st.cap_level, 1)
+        while True:
+            if level > pol.max_cap_doublings:
+                raise CapOverflow(
+                    f"tenant {tenant!r} exhausted its cap budget "
+                    f"(max_cap_doublings={pol.max_cap_doublings})"
+                )
+            cap = self.config.cap << level
+            cfg = self.config.replace(cap=cap, cap_y=self.config.cap_y << level)
+            try:
+                plan = self.engine.compile(
+                    self._query, cfg, admit=self._admit(st)
+                )
+            except AdmissionError:
+                st.admission_denials += 1
+                self._stats["admission_denials"] += 1
+                raise
+            st.cap_growth_events += 1
+            self._stats["cap_growth_events"] += 1
+            st.cap_level = max(st.cap_level, level)
+            qb = self._encode(rs, 0)
+            host = eng.host_result(
+                plan.submit(qb),
+                unbounded=any(r.op in eng._UNBOUNDED_OPS for r in rs),
+            )
+            if not host.overflow[: len(rs)].any():
+                return [
+                    eng.decode_lane(r.op, host, i) for i, r in enumerate(rs)
+                ]
+            level += 1
+
+    def _admit(self, st: _TenantState):
+        """The per-tenant plan-cache admission closure: charge MISSES
+        against ``max_plans`` (the engine never calls this on a hit)."""
+
+        def admit(_key):
+            if st.plans_charged >= self.tenant_policy.max_plans:
+                return False
+            st.plans_charged += 1
+            return True
+
+        return admit
+
+    def _tenant(self, name: str) -> _TenantState:
+        st = self._tenants.get(name)
+        if st is None:
+            st = self._tenants[name] = _TenantState(name)
+        return st
+
+    # -- stats ----------------------------------------------------------
+
+    def reset_stats(self) -> None:
+        """Zero counters and latency samples — the benchmark warmup
+        boundary.  Admission state (cap levels, plan charges) is retained:
+        it is real broker state, not measurement."""
+        self._stats.clear()
+        self._queue_peak = 0
+        for st in self._tenants.values():
+            st.lat_s.clear()
+            st.completed = st.failed = st.shed = 0
+
+    def stats(self) -> dict:
+        """Structured serving stats (JSON-ready)."""
+        all_lat = [t for st in self._tenants.values() for t in st.lat_s]
+        batches = int(self._stats["batches"])
+        return {
+            "batches": batches,
+            "lanes": int(self._stats["lanes"]),
+            "coalesce_factor": (
+                self._stats["lanes"] / batches if batches else 0.0
+            ),
+            "flush_size": int(self._stats["flush_size"]),
+            "flush_deadline": int(self._stats["flush_deadline"]),
+            "flush_drain": int(self._stats["flush_drain"]),
+            "queue_depth": len(self._queue),
+            "queue_peak": self._queue_peak,
+            "shed": int(self._stats["shed"]),
+            "cap_growth_events": int(self._stats["cap_growth_events"]),
+            "admission_denials": int(self._stats["admission_denials"]),
+            "queries": len(all_lat),
+            "p50_ms": _ms(tail_percentile(all_lat, 50)),
+            "p99_ms": _ms(tail_percentile(all_lat, 99)),
+            "tenants": {
+                name: {
+                    "queries": st.completed,
+                    "failed": st.failed,
+                    "shed": st.shed,
+                    "pending": st.pending,
+                    "cap_level": st.cap_level,
+                    "plans_charged": st.plans_charged,
+                    "cap_growth_events": st.cap_growth_events,
+                    "p50_ms": _ms(tail_percentile(st.lat_s, 50)),
+                    "p99_ms": _ms(tail_percentile(st.lat_s, 99)),
+                }
+                for name, st in sorted(self._tenants.items())
+            },
+        }
+
+
+def _ms(v: float | None) -> float | None:
+    return None if v is None else v * 1e3

@@ -31,6 +31,28 @@ def dp_axes(mesh: jax.sharding.Mesh) -> tuple[str, ...]:
     return tuple(a for a in mesh.axis_names if a != "model")
 
 
+def serve_mesh_shape(n_devices: int, *, model_max: int = 4) -> tuple[int, int]:
+    """Factor ``n_devices`` into a (data, model) serve-mesh shape that uses
+    EVERY device: the model axis is the largest divisor of ``n_devices``
+    not exceeding ``model_max``.
+
+    This replaces the old ``mp = min(4, n)`` factorization, whose
+    ``(n // mp, mp)`` mesh silently dropped devices whenever ``n % mp``
+    was nonzero (6 devices became a 1x4 mesh serving on 4).  Here
+    6 -> (2, 3), 8 -> (2, 4), 5 -> (5, 1); the product is always
+    ``n_devices`` or the call fails loudly.
+    """
+    if n_devices < 1:
+        raise ValueError(f"need at least one device, got {n_devices}")
+    mp = max(
+        d for d in range(1, min(model_max, n_devices) + 1)
+        if n_devices % d == 0
+    )
+    shape = (n_devices // mp, mp)
+    assert shape[0] * shape[1] == n_devices
+    return shape
+
+
 # TPU v5e hardware constants (per chip) — the roofline denominators
 PEAK_FLOPS_BF16 = 197e12  # FLOP/s
 HBM_BW = 819e9  # B/s

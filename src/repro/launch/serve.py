@@ -1,97 +1,290 @@
-"""Serving driver for the k²-triples engine: build a store, compile ONE
-serve plan (optionally sharded), stream query batches through it.
+"""Multi-tenant serving benchmark: drive the streaming broker with a
+skewed tenant trace and report sustained queries/sec + per-QUERY tail
+latency, single-device and predicate-sharded.
 
-    python -m repro.launch.serve --triples 100000 --batch 1024 --queries 10
+    python -m repro.launch.serve --triples 100000 --tenants 8 --queries 4096
+    python -m repro.launch.serve --fast --sharded --json serve_rows.json
 
-All execution knobs ride an explicit ``ExecConfig`` — the env flags are
-folded in once via ``ExecConfig.from_env()``; the hot loop is
-``plan(batch)`` with zero per-call configuration.
+The harness builds a store, compiles ONE base ``ServeQ`` plan through
+:class:`repro.launch.broker.ServeBroker`, replays a Zipf-skewed
+multi-tenant trace of mixed serve-IR ops through per-tenant async
+streams, and reports the broker's structured stats.  Latency is measured
+per query (submit -> decoded result), never per batch, and tail
+percentiles follow ``tail_percentile``'s sample-count guard — a p99 is
+only printed when 100+ samples support it.
+
+All execution knobs ride an explicit ``ExecConfig`` (env flags folded in
+once via ``ExecConfig.from_env``); ``--sharded`` factors the serve mesh
+from the ACTUAL device count (``mesh.serve_mesh_shape`` — every device
+used or a loud failure) and refuses to run when only one device is
+visible rather than silently degrading to single-device numbers.
 """
 
 from __future__ import annotations
 
 import argparse
+import asyncio
+import json
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
+from repro.launch.broker import (
+    CoalescePolicy, ServeBroker, TenantPolicy, tail_percentile,
+)
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--triples", type=int, default=100_000)
-    ap.add_argument("--preds", type=int, default=64)
-    ap.add_argument("--batch", type=int, default=1024)
-    ap.add_argument("--queries", type=int, default=10, help="batches to serve")
-    ap.add_argument("--cap", type=int, default=1024)
-    ap.add_argument(
-        "--backend", default=None, choices=("pallas", "jnp"),
-        help="scan backend override (default: ExecConfig.from_env)",
+# mixed-op trace composition: production traffic is mostly point lookups
+# and bounded scans, with a thin unbounded-?P tail (the paper's worst case)
+_OP_WEIGHTS = {
+    0: 0.30,  # OP_CHECK
+    1: 0.25,  # OP_ROW
+    2: 0.25,  # OP_COL
+    3: 0.08,  # OP_S_ANY_ANY
+    4: 0.07,  # OP_ANY_ANY_O
+    5: 0.05,  # OP_S_ANY_O
+}
+
+
+def zipf_weights(n_tenants: int, a: float) -> np.ndarray:
+    """Normalized Zipf(a) tenant weights: tenant 0 is the heaviest."""
+    w = 1.0 / np.arange(1, n_tenants + 1, dtype=np.float64) ** a
+    return w / w.sum()
+
+
+def make_trace(
+    ds, n_queries: int, n_tenants: int, *, zipf_a: float = 1.1,
+    unbounded: bool = True, seed: int = 0,
+) -> list[tuple[str, int, int, int, int]]:
+    """A skewed multi-tenant trace: ``(tenant, op, s, p, o)`` rows.
+
+    Tenants are Zipf(a)-weighted; ops follow ``_OP_WEIGHTS`` (bounded-only
+    when ``unbounded=False``); ids come from real triples so every query
+    has a non-empty answer shape to decode.
+    """
+    rng = np.random.default_rng(seed)
+    ops_pool = [op for op in _OP_WEIGHTS if unbounded or op < 3]
+    p_ops = np.array([_OP_WEIGHTS[op] for op in ops_pool])
+    p_ops = p_ops / p_ops.sum()
+    ops = rng.choice(ops_pool, size=n_queries, p=p_ops)
+    tenants = rng.choice(n_tenants, size=n_queries, p=zipf_weights(n_tenants, zipf_a))
+    rows = ds.ids[rng.integers(0, ds.n_triples, n_queries)]
+    trace = []
+    for i in range(n_queries):
+        s, p, o = map(int, rows[i])
+        if ops[i] >= 3:
+            p = 0  # unbounded-?P ops leave the predicate free
+        trace.append((f"tenant-{tenants[i]}", int(ops[i]), s, p, o))
+    return trace
+
+
+async def _replay(broker: ServeBroker, trace) -> int:
+    """Replay the trace as one async stream per tenant (per-tenant FIFO),
+    counting decoded results."""
+    per_tenant: dict[str, list] = {}
+    for tenant, op, s, p, o in trace:
+        per_tenant.setdefault(tenant, []).append((op, s, p, o))
+
+    async def one(tenant, queries):
+        n = 0
+        async for _ in broker.stream(tenant, queries):
+            n += 1
+        return n
+
+    counts = await asyncio.gather(
+        *(one(t, qs) for t, qs in per_tenant.items())
     )
-    ap.add_argument("--sharded", action="store_true", help="shard over local devices")
-    args = ap.parse_args()
+    return sum(counts)
+
+
+def run_bench(
+    *,
+    n_triples: int = 100_000,
+    n_preds: int = 64,
+    n_tenants: int = 8,
+    n_queries: int = 4096,
+    zipf_a: float = 1.1,
+    cap: int = 1024,
+    max_batch: int = 256,
+    deadline_ms: float = 2.0,
+    backend: str | None = None,
+    sharded: bool = False,
+    unbounded: bool = True,
+    warmup: int = 64,
+    seed: int = 0,
+    quiet: bool = False,
+) -> dict:
+    """Build a store, serve a skewed multi-tenant trace through the
+    broker, and return one machine-readable serving row."""
+    import jax
 
     from repro.core import engine as eng, k2triples
-    from repro.core.query import ExecConfig, ServeQ
+    from repro.core.query import ExecConfig
     from repro.data import rdf
+    from repro.launch import mesh as meshlib
 
     ds = rdf.generate(
-        args.triples,
-        n_subjects=max(64, args.triples // 12),
-        n_preds=args.preds,
-        n_objects=max(64, args.triples // 8),
-        seed=0,
+        n_triples,
+        n_subjects=max(64, n_triples // 12),
+        n_preds=n_preds,
+        n_objects=max(64, n_triples // 8),
+        preds_per_subject=min(6, n_preds),
+        seed=seed,
     )
     t0 = time.time()
     store = k2triples.from_id_triples(
         ds.ids, n_so=ds.n_so, n_subjects=ds.n_subjects,
         n_objects=ds.n_objects, n_preds=ds.n_preds,
     )
-    print(
-        f"store: {store.n_triples} triples, {store.n_preds} preds, "
-        f"side {store.meta.side}, {store.stats.total_bits/8/1024:.1f} KiB structure "
-        f"({store.stats.total_bits/max(store.n_triples,1):.2f} bits/triple), "
-        f"built in {time.time()-t0:.1f}s"
-    )
+    if not quiet:
+        print(
+            f"store: {store.n_triples} triples, {store.n_preds} preds, "
+            f"side {store.meta.side}, "
+            f"{store.stats.total_bits/8/1024:.1f} KiB structure "
+            f"({store.stats.total_bits/max(store.n_triples,1):.2f} bits/triple), "
+            f"built in {time.time()-t0:.1f}s"
+        )
 
-    overrides: dict = {"cap": args.cap}
-    if args.backend is not None:
-        overrides["backend"] = args.backend
-    if args.sharded and len(jax.devices()) > 1:
-        n = len(jax.devices())
-        mp = min(4, n)
-        overrides["mesh"] = jax.make_mesh((n // mp, mp), ("data", "model"))
-        print(f"sharded over mesh {dict(overrides['mesh'].shape)}")
+    n_dev = len(jax.devices())
+    overrides: dict = {"cap": cap}
+    if backend is not None:
+        overrides["backend"] = backend
+    mesh_shape = None
+    if sharded:
+        if n_dev < 2:
+            raise ValueError(
+                "--sharded requested but only one device is visible; "
+                "refusing to silently serve unsharded (run on a multi-"
+                "device backend, or fake hosts with XLA_FLAGS="
+                "--xla_force_host_platform_device_count=N)"
+            )
+        mesh_shape = meshlib.serve_mesh_shape(n_dev)
+        overrides["mesh"] = jax.make_mesh(mesh_shape, ("data", "model"))
+        if not quiet:
+            print(f"sharded over mesh {{'data': {mesh_shape[0]}, 'model': {mesh_shape[1]}}}")
     cfg = ExecConfig.from_env(**overrides)
 
     engine = eng.Engine(store)
-    plan = engine.compile(ServeQ(unbounded=False), cfg)
-
-    rng = np.random.default_rng(1)
-    lat = []
-    hits = results = 0
-    for i in range(args.queries):
-        ids = ds.ids[rng.integers(0, ds.n_triples, args.batch)]
-        q = eng.ServeBatch(
-            op=jnp.asarray(rng.integers(0, 3, args.batch), jnp.int32),
-            s=jnp.asarray(ids[:, 0], jnp.int32),
-            p=jnp.asarray(ids[:, 1], jnp.int32),
-            o=jnp.asarray(ids[:, 2], jnp.int32),
-        )
-        t0 = time.time()
-        r = plan(q)
-        jax.block_until_ready(r.ids)
-        lat.append(time.time() - t0)
-        hits += int(np.asarray(r.hit).sum())
-        results += int(np.asarray(r.count).sum())
-    lat = np.array(lat[1:]) if len(lat) > 1 else np.array(lat)  # drop compile
-    print(
-        f"{args.queries} batches × {args.batch} queries: "
-        f"p50 {np.percentile(lat,50)*1e3:.2f} ms, p99 {np.percentile(lat,99)*1e3:.2f} ms, "
-        f"{args.batch/np.median(lat):,.0f} queries/s, "
-        f"{hits} check-hits, {results} scan results"
+    trace = make_trace(
+        ds, n_queries, n_tenants, zipf_a=zipf_a, unbounded=unbounded, seed=seed + 1
     )
+    # bound per-tenant windows so ~two coalesced batches stay outstanding:
+    # the pipeline keeps both buffers fed while latency still means
+    # "time through the broker", not "time parked in an unbounded queue"
+    depth = max(16, (2 * max_batch) // max(n_tenants, 1))
+
+    async def main():
+        broker = ServeBroker(
+            engine, cfg, unbounded=unbounded,
+            coalesce=CoalescePolicy(
+                max_batch=max_batch, max_delay_s=deadline_ms * 1e-3
+            ),
+            tenant_policy=TenantPolicy(queue_depth=depth),
+        )
+        async with broker:
+            # warmup: compile the serve program + prime every op type
+            await _replay(broker, trace[: min(warmup, len(trace))])
+            broker.reset_stats()
+            t0 = time.perf_counter()
+            n_done = await _replay(broker, trace)
+            wall = time.perf_counter() - t0
+        return broker.stats(), n_done, wall
+
+    stats, n_done, wall = asyncio.run(main())
+    assert n_done == n_queries, (n_done, n_queries)
+    row = {
+        "mode": "sharded" if sharded else "single",
+        "mesh": list(mesh_shape) if mesh_shape else None,
+        "devices": n_dev,
+        "backend": cfg.backend,
+        "triples": store.n_triples,
+        "preds": store.n_preds,
+        "tenants": n_tenants,
+        "zipf_a": zipf_a,
+        "unbounded": unbounded,
+        "queries": n_queries,
+        "cap": cap,
+        "max_batch": max_batch,
+        "deadline_ms": deadline_ms,
+        "wall_s": wall,
+        "qps": n_queries / wall,
+        "p50_ms": stats["p50_ms"],
+        "p99_ms": stats["p99_ms"],
+        "coalesce_factor": stats["coalesce_factor"],
+        "batches": stats["batches"],
+        "shed": stats["shed"],
+        "cap_growth_events": stats["cap_growth_events"],
+        "queue_peak": stats["queue_peak"],
+        "per_tenant": stats["tenants"],
+    }
+    if not quiet:
+        print(format_row(row))
+    return row
+
+
+def format_row(row: dict) -> str:
+    def pct(v):
+        return f"{v:.2f} ms" if v is not None else "n/a (insufficient samples)"
+
+    return (
+        f"{row['mode']} x {row['backend']}: {row['queries']} queries, "
+        f"{row['tenants']} tenants (zipf {row['zipf_a']}): "
+        f"{row['qps']:,.0f} queries/s sustained, per-query p50 {pct(row['p50_ms'])}, "
+        f"p99 {pct(row['p99_ms'])}, coalesce x{row['coalesce_factor']:.1f} "
+        f"({row['batches']} batches), {row['cap_growth_events']} cap growths, "
+        f"{row['shed']} shed"
+    )
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--triples", type=int, default=100_000)
+    ap.add_argument("--preds", type=int, default=64)
+    ap.add_argument("--tenants", type=int, default=8)
+    ap.add_argument("--zipf", type=float, default=1.1, help="tenant skew exponent")
+    ap.add_argument("--queries", type=int, default=4096, help="trace length")
+    ap.add_argument("--batch", type=int, default=256, help="coalesce max_batch")
+    ap.add_argument(
+        "--deadline-ms", type=float, default=2.0,
+        help="coalesce deadline for the oldest pending query",
+    )
+    ap.add_argument("--cap", type=int, default=1024)
+    ap.add_argument(
+        "--backend", default=None, choices=("pallas", "jnp"),
+        help="scan backend override (default: ExecConfig.from_env)",
+    )
+    ap.add_argument("--sharded", action="store_true", help="shard over local devices")
+    ap.add_argument(
+        "--bounded-only", action="store_true",
+        help="trace without unbounded-?P ops (compiles the u_* block out)",
+    )
+    ap.add_argument("--fast", action="store_true", help="tiny smoke-test trace")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--json", metavar="PATH", default=None,
+        help="write the serving rows as JSON ({'serving': [...]})",
+    )
+    args = ap.parse_args(argv)
+
+    kw = dict(
+        n_triples=args.triples, n_preds=args.preds, n_tenants=args.tenants,
+        n_queries=args.queries, zipf_a=args.zipf, cap=args.cap,
+        max_batch=args.batch, deadline_ms=args.deadline_ms,
+        backend=args.backend, sharded=args.sharded,
+        unbounded=not args.bounded_only, seed=args.seed,
+    )
+    if args.fast:
+        kw.update(
+            n_triples=20_000, n_preds=16, n_queries=256, max_batch=64,
+            cap=256, warmup=32,
+        )
+    try:
+        row = run_bench(**kw)
+    except ValueError as e:
+        raise SystemExit(f"error: {e}")
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump({"serving": [row]}, fh, indent=2, default=float)
+        print(f"# wrote {args.json}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,459 @@
+"""The streaming multi-tenant serve broker (`repro.launch.broker`):
+
+  * coalescing respects the deadline/size policy;
+  * per-tenant result ordering is preserved, including through retries;
+  * back-pressure sheds per the documented shed-newest policy;
+  * admission control isolates a cap-doubling tenant (budgets, quotas,
+    and the shared base plan never growing);
+  * broker results are bit-identical to direct ``plan(batch)`` calls on
+    both scan backends, single-device and mesh-sharded.
+"""
+
+import asyncio
+from collections import Counter
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import engine as eng, k2triples
+from repro.core.query import (
+    AdmissionError, CapOverflow, ExecConfig, ServeQ,
+)
+from repro.data import rdf
+from repro.launch.broker import (
+    CoalescePolicy, QueueFull, ServeBroker, TenantPolicy, tail_percentile,
+)
+
+
+@pytest.fixture(scope="module")
+def store_and_truth():
+    ds = rdf.generate(
+        2500, n_subjects=50, n_preds=12, n_objects=70,
+        preds_per_subject=3, seed=17,
+    )
+    store = k2triples.from_id_triples(
+        ds.ids, n_so=ds.n_so, n_subjects=ds.n_subjects,
+        n_objects=ds.n_objects, n_preds=ds.n_preds,
+    )
+    return store, set(map(tuple, ds.ids.tolist())), ds
+
+
+def _hot_row(T):
+    """The (s, p) with the most objects — guaranteed to overflow tiny caps."""
+    (s, p), n = Counter((s, p) for s, p, o in T).most_common(1)[0]
+    return s, p, n
+
+
+def _mixed_queries(ds, n, seed=0, ops_hi=6):
+    rng = np.random.default_rng(seed)
+    ops = rng.integers(0, ops_hi, n)
+    rows = ds.ids[rng.integers(0, ds.n_triples, n)]
+    out = []
+    for i in range(n):
+        s, p, o = map(int, rows[i])
+        out.append((int(ops[i]), s, 0 if ops[i] >= 3 else p, o))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# coalescing policy
+# ---------------------------------------------------------------------------
+
+
+def test_coalesce_size_flush(store_and_truth):
+    """max_batch pending requests flush as ONE batch (size-triggered)."""
+    store, T, ds = store_and_truth
+    E = eng.Engine(store)
+    cfg = ExecConfig(backend="jnp", cap=256)
+
+    async def main():
+        pol = CoalescePolicy(max_batch=16, max_delay_s=10.0)  # deadline far off
+        async with ServeBroker(E, cfg, unbounded=False, coalesce=pol) as b:
+            futs = [
+                b.submit_nowait("t0", eng.OP_CHECK, *map(int, ds.ids[i]))
+                for i in range(16)
+            ]
+            await asyncio.gather(*futs)
+            return b.stats()
+
+    st = asyncio.run(main())
+    assert st["batches"] == 1
+    assert st["lanes"] == 16
+    assert st["flush_size"] == 1
+    assert st["coalesce_factor"] == 16.0
+
+
+def test_coalesce_deadline_flush(store_and_truth):
+    """Fewer than max_batch requests flush once the oldest hits the
+    deadline — they are not parked until the batch fills."""
+    store, T, ds = store_and_truth
+    E = eng.Engine(store)
+    cfg = ExecConfig(backend="jnp", cap=256)
+
+    async def main():
+        pol = CoalescePolicy(max_batch=64, max_delay_s=0.01)
+        async with ServeBroker(E, cfg, unbounded=False, coalesce=pol) as b:
+            futs = [
+                b.submit_nowait("t0", eng.OP_CHECK, *map(int, ds.ids[i]))
+                for i in range(3)
+            ]
+            await asyncio.gather(*futs)
+            st = b.stats()
+            assert st["batches"] == 1 and st["lanes"] == 3
+            assert st["flush_deadline"] == 1
+            return st
+
+    asyncio.run(main())
+
+
+# ---------------------------------------------------------------------------
+# ordering
+# ---------------------------------------------------------------------------
+
+
+def test_per_tenant_ordering_preserved(store_and_truth):
+    """Results resolve in submission order per tenant — including when a
+    tenant's lane overflows and is retried at grown cap mid-stream."""
+    store, T, ds = store_and_truth
+    E = eng.Engine(store)
+    s_hot, p_hot, n_hot = _hot_row(T)
+    cfg = ExecConfig(backend="jnp", cap=2)  # hot row overflows
+
+    order: dict[str, list[int]] = {"A": [], "B": []}
+
+    async def main():
+        pol = CoalescePolicy(max_batch=32, max_delay_s=0.005)
+        async with ServeBroker(E, cfg, unbounded=False, coalesce=pol) as b:
+            futs = []
+            for k in range(12):
+                tenant = "A" if k % 2 == 0 else "B"
+                if tenant == "A" and k in (4, 6):
+                    f = b.submit_nowait(tenant, eng.OP_ROW, s_hot, p_hot, 0)
+                else:
+                    s, p, o = map(int, ds.ids[k])
+                    f = b.submit_nowait(tenant, eng.OP_CHECK, s, p, o)
+                f.add_done_callback(
+                    lambda _, t=tenant, seq=k: order[t].append(seq)
+                )
+                futs.append(f)
+            await asyncio.gather(*futs)
+
+    asyncio.run(main())
+    assert order["A"] == sorted(order["A"])
+    assert order["B"] == sorted(order["B"])
+    assert len(order["A"]) == 6 and len(order["B"]) == 6
+
+
+# ---------------------------------------------------------------------------
+# back-pressure
+# ---------------------------------------------------------------------------
+
+
+def test_backpressure_sheds_newest(store_and_truth):
+    """The documented shed policy: a submit over queue_depth raises
+    QueueFull synchronously, accepted requests all complete, and other
+    tenants are unaffected."""
+    store, T, ds = store_and_truth
+    E = eng.Engine(store)
+    cfg = ExecConfig(backend="jnp", cap=256)
+
+    async def main():
+        pol = CoalescePolicy(max_batch=8, max_delay_s=5.0)
+        async with ServeBroker(
+            E, cfg, unbounded=False, coalesce=pol,
+            tenant_policy=TenantPolicy(queue_depth=4),
+        ) as b:
+            accepted = [
+                b.submit_nowait("flood", eng.OP_CHECK, *map(int, ds.ids[i]))
+                for i in range(4)
+            ]
+            with pytest.raises(QueueFull):
+                b.submit_nowait("flood", eng.OP_CHECK, *map(int, ds.ids[4]))
+            # a different tenant still gets in
+            ok = b.submit_nowait("calm", eng.OP_CHECK, *map(int, ds.ids[5]))
+            res = await asyncio.gather(*accepted, ok)
+            st = b.stats()
+            assert st["shed"] == 1
+            assert st["tenants"]["flood"]["shed"] == 1
+            assert st["tenants"]["calm"]["shed"] == 0
+            assert st["tenants"]["flood"]["queries"] == 4  # nothing accepted dropped
+            return res
+
+    res = asyncio.run(main())
+    assert all(isinstance(r, bool) for r in res)
+
+
+# ---------------------------------------------------------------------------
+# admission control / cap isolation
+# ---------------------------------------------------------------------------
+
+
+def test_cap_doubling_tenant_isolated(store_and_truth):
+    """A tenant whose queries overflow grows ITS retry plans; the shared
+    base plan keeps its cap, the calm tenant's stats stay clean, and the
+    grown results are exact."""
+    store, T, ds = store_and_truth
+    E = eng.Engine(store)
+    s_hot, p_hot, n_hot = _hot_row(T)
+    assert n_hot > 4
+    cfg = ExecConfig(backend="jnp", cap=2)
+
+    async def main():
+        async with ServeBroker(
+            E, cfg, unbounded=False,
+            coalesce=CoalescePolicy(max_batch=16, max_delay_s=0.002),
+            tenant_policy=TenantPolicy(max_cap_doublings=8, max_plans=8),
+        ) as b:
+            fa = [b.submit_nowait("hot", eng.OP_ROW, s_hot, p_hot, 0)
+                  for _ in range(3)]
+            fb = [b.submit_nowait("calm", eng.OP_CHECK, *map(int, ds.ids[i]))
+                  for i in range(3)]
+            ra = await asyncio.gather(*fa)
+            rb = await asyncio.gather(*fb)
+            return ra, rb, b.stats(), b.base_plan.effective_cap
+
+    ra, rb, st, base_cap = asyncio.run(main())
+    exp = sorted(oo for (ss, pp, oo) in T if ss == s_hot and pp == p_hot)
+    for r in ra:
+        assert list(r) == exp  # complete answers after growth
+    assert all(rb)
+    assert base_cap == 2  # the SHARED plan never grew
+    assert st["tenants"]["hot"]["cap_level"] >= 1
+    assert st["tenants"]["hot"]["plans_charged"] >= 1
+    assert st["tenants"]["calm"]["cap_level"] == 0
+    assert st["tenants"]["calm"]["plans_charged"] == 0
+    assert st["cap_growth_events"] >= 1
+
+
+def test_cap_budget_exhaustion_fails_only_offender(store_and_truth):
+    store, T, ds = store_and_truth
+    E = eng.Engine(store)
+    s_hot, p_hot, _ = _hot_row(T)
+    cfg = ExecConfig(backend="jnp", cap=2)
+
+    async def main():
+        async with ServeBroker(
+            E, cfg, unbounded=False,
+            coalesce=CoalescePolicy(max_batch=16, max_delay_s=0.002),
+            tenant_policy=TenantPolicy(max_cap_doublings=0),
+        ) as b:
+            f_bad = b.submit_nowait("greedy", eng.OP_ROW, s_hot, p_hot, 0)
+            f_ok = b.submit_nowait("calm", eng.OP_CHECK, *map(int, ds.ids[0]))
+            with pytest.raises(CapOverflow):
+                await f_bad
+            assert await f_ok is True
+            st = b.stats()
+            assert st["tenants"]["greedy"]["failed"] == 1
+            assert st["tenants"]["calm"]["failed"] == 0
+
+    asyncio.run(main())
+
+
+def test_plan_quota_denial(store_and_truth):
+    """max_plans=0 denies the first retry compile with AdmissionError; the
+    engine's plan cache gains nothing for that tenant."""
+    store, T, ds = store_and_truth
+    E = eng.Engine(store)
+    s_hot, p_hot, _ = _hot_row(T)
+    cfg = ExecConfig(backend="jnp", cap=2)
+
+    async def main():
+        async with ServeBroker(
+            E, cfg, unbounded=False,
+            tenant_policy=TenantPolicy(max_plans=0),
+            coalesce=CoalescePolicy(max_batch=8, max_delay_s=0.002),
+        ) as b:
+            misses_before = E.plan_cache_stats["misses"]
+            with pytest.raises(AdmissionError):
+                await b.submit("greedy", eng.OP_ROW, s_hot, p_hot, 0)
+            st = b.stats()
+            assert st["admission_denials"] == 1
+            assert E.plan_cache_stats["misses"] == misses_before
+
+    asyncio.run(main())
+
+
+def test_shared_retry_plans_are_free_for_second_tenant(store_and_truth):
+    """Admission charges plan-cache MISSES only: after tenant A compiled
+    the doubled-cap plan, tenant B's identical growth is a hit — zero
+    plans charged to B."""
+    store, T, ds = store_and_truth
+    E = eng.Engine(store)
+    s_hot, p_hot, _ = _hot_row(T)
+    cfg = ExecConfig(backend="jnp", cap=2)
+
+    async def main():
+        async with ServeBroker(
+            E, cfg, unbounded=False,
+            coalesce=CoalescePolicy(max_batch=8, max_delay_s=0.002),
+            tenant_policy=TenantPolicy(max_cap_doublings=8, max_plans=8),
+        ) as b:
+            await b.submit("A", eng.OP_ROW, s_hot, p_hot, 0)
+            await b.submit("B", eng.OP_ROW, s_hot, p_hot, 0)
+            st = b.stats()
+            assert st["tenants"]["A"]["plans_charged"] >= 1
+            assert st["tenants"]["B"]["plans_charged"] == 0  # cache hits
+            assert st["tenants"]["B"]["cap_level"] >= 1  # but it did grow
+
+    asyncio.run(main())
+
+
+# ---------------------------------------------------------------------------
+# differential: broker == direct plan(batch)
+# ---------------------------------------------------------------------------
+
+
+def _direct_decoded(E, cfg, queries, unbounded=True):
+    """Reference: one direct Plan call per query through the blocking API,
+    decoded with the same lane decoder."""
+    plan = E.compile(ServeQ(unbounded=unbounded), cfg)
+    out = []
+    for (op, s, p, o) in queries:
+        qb = eng.ServeBatch(
+            op=jnp.asarray([op] + [-1] * 7, jnp.int32),
+            s=jnp.asarray([s] + [0] * 7, jnp.int32),
+            p=jnp.asarray([p] + [0] * 7, jnp.int32),
+            o=jnp.asarray([o] + [0] * 7, jnp.int32),
+        )
+        r = plan(qb)
+        out.append(eng.decode_lane(op, eng.host_result(r), 0))
+    return out
+
+
+def _assert_same(a, b):
+    if isinstance(a, dict):
+        assert set(a) == set(b)
+        for k in a:
+            assert np.asarray(a[k]).tolist() == np.asarray(b[k]).tolist()
+    elif isinstance(a, (bool, np.bool_)):
+        assert bool(a) == bool(b)
+    else:
+        assert np.asarray(a).tolist() == np.asarray(b).tolist()
+
+
+@pytest.mark.parametrize("backend", ["pallas", "jnp"])
+def test_broker_matches_direct_plan(store_and_truth, backend):
+    store, T, ds = store_and_truth
+    E = eng.Engine(store)
+    cfg = ExecConfig(backend=backend, cap=256)
+    queries = _mixed_queries(ds, 24, seed=3)
+
+    async def main():
+        async with ServeBroker(
+            E, cfg, coalesce=CoalescePolicy(max_batch=8, max_delay_s=0.002)
+        ) as b:
+            futs = [b.submit_nowait("t0", *q) for q in queries]
+            return await asyncio.gather(*futs)
+
+    got = asyncio.run(main())
+    ref = _direct_decoded(E, cfg, queries)
+    for g, r in zip(got, ref):
+        _assert_same(g, r)
+
+
+def test_broker_matches_direct_plan_sharded(store_and_truth):
+    """Mesh-sharded broker == single-device reference (1x1 mesh exercises
+    the shard_map'd program + data-axis padding on any device count)."""
+    import jax
+
+    store, T, ds = store_and_truth
+    E = eng.Engine(store)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    cfg = ExecConfig(backend="jnp", cap=256, mesh=mesh)
+    ref_cfg = ExecConfig(backend="jnp", cap=256)
+    queries = _mixed_queries(ds, 12, seed=5)
+
+    async def main():
+        async with ServeBroker(
+            E, cfg, coalesce=CoalescePolicy(max_batch=8, max_delay_s=0.002)
+        ) as b:
+            futs = [b.submit_nowait("t0", *q) for q in queries]
+            return await asyncio.gather(*futs)
+
+    got = asyncio.run(main())
+    ref = _direct_decoded(E, ref_cfg, queries)
+    for g, r in zip(got, ref):
+        _assert_same(g, r)
+
+
+def test_stream_yields_in_order(store_and_truth):
+    store, T, ds = store_and_truth
+    E = eng.Engine(store)
+    cfg = ExecConfig(backend="jnp", cap=256)
+    queries = _mixed_queries(ds, 16, seed=7, ops_hi=3)
+
+    async def main():
+        out = []
+        async with ServeBroker(
+            E, cfg, unbounded=False,
+            coalesce=CoalescePolicy(max_batch=8, max_delay_s=0.002),
+            tenant_policy=TenantPolicy(queue_depth=4),  # forces windowing
+        ) as b:
+            async for res in b.stream("t0", queries):
+                out.append(res)
+        return out
+
+    got = asyncio.run(main())
+    ref = _direct_decoded(E, cfg, queries, unbounded=False)
+    assert len(got) == len(ref)
+    for g, r in zip(got, ref):
+        _assert_same(g, r)
+
+
+# ---------------------------------------------------------------------------
+# stats surface
+# ---------------------------------------------------------------------------
+
+
+def test_tail_percentile_guard():
+    assert tail_percentile([], 50) is None
+    assert tail_percentile([1.0], 50) is None  # p50 needs 2 samples
+    assert tail_percentile([1.0, 2.0], 50) == pytest.approx(1.5)
+    assert tail_percentile(list(range(99)), 99) is None  # p99 needs 100
+    assert tail_percentile(list(range(100)), 99) is not None
+    with pytest.raises(ValueError):
+        tail_percentile([1.0], 100)
+
+
+def test_stats_surface(store_and_truth):
+    store, T, ds = store_and_truth
+    E = eng.Engine(store)
+    cfg = ExecConfig(backend="jnp", cap=256)
+
+    async def main():
+        async with ServeBroker(
+            E, cfg, unbounded=False,
+            coalesce=CoalescePolicy(max_batch=8, max_delay_s=0.002),
+        ) as b:
+            futs = [
+                b.submit_nowait(f"t{i % 2}", eng.OP_CHECK, *map(int, ds.ids[i]))
+                for i in range(8)
+            ]
+            await asyncio.gather(*futs)
+            st = b.stats()
+            b.reset_stats()
+            return st, b.stats()
+
+    st, cleared = asyncio.run(main())
+    assert st["queries"] == 8
+    assert st["batches"] >= 1
+    assert st["p50_ms"] is not None and st["p50_ms"] > 0
+    assert st["p99_ms"] is None  # 8 samples cannot support a p99
+    assert set(st["tenants"]) == {"t0", "t1"}
+    assert st["queue_peak"] >= 1
+    assert cleared["queries"] == 0 and cleared["batches"] == 0
+
+
+def test_submit_after_close_rejected(store_and_truth):
+    store, _, ds = store_and_truth
+    E = eng.Engine(store)
+
+    async def main():
+        b = ServeBroker(E, ExecConfig(backend="jnp", cap=64), unbounded=False)
+        async with b:
+            await b.submit("t", eng.OP_CHECK, *map(int, ds.ids[0]))
+        with pytest.raises(RuntimeError):
+            b.submit_nowait("t", eng.OP_CHECK, 1, 1, 1)
+
+    asyncio.run(main())
