@@ -12,6 +12,12 @@ file (``BENCH_*.json``) that CI also uploads as an artifact.
 Every backend comparison is driven by explicit ``ExecConfig`` objects
 (see ``bench_patterns.BACKEND_CFGS`` / ``bench_joins.run``); the harness
 never mutates ``REPRO_SCAN_BACKEND``.
+
+Each JSON lands with a ``provenance`` header (git SHA, UTC timestamp,
+jax version, backend, device kind/count — ``repro.obs.provenance``) so
+the committed perf trajectory is self-describing.  ``--trace`` /
+``--metrics`` switch the observability layer on around the sweep and
+write its Chrome-trace / metrics exports next to the results.
 """
 
 from __future__ import annotations
@@ -33,14 +39,32 @@ def main() -> None:
         help="also write all tables as JSON (default path: BENCH_results.json "
         "at the repo root)",
     )
+    ap.add_argument(
+        "--trace", nargs="?", const="bench_trace.json", default=None,
+        metavar="PATH",
+        help="trace the sweep; write Chrome trace_event JSON",
+    )
+    ap.add_argument(
+        "--metrics", nargs="?", const="bench_metrics.json", default=None,
+        metavar="PATH",
+        help="write the obs metrics snapshot + Prometheus text as JSON",
+    )
     args = ap.parse_args()
+
+    from repro import obs
 
     from benchmarks import (
         bench_compression, bench_joins, bench_kernels, bench_patterns,
         bench_serve,
     )
 
-    results: dict = {"fast": bool(args.fast)}
+    tracer = metrics = None
+    if args.trace is not None or args.metrics is not None:
+        from repro.core.query import ObsConfig
+
+        tracer, metrics = obs.enable(ObsConfig())
+
+    results: dict = {"fast": bool(args.fast), "provenance": obs.provenance()}
     t0 = time.time()
     print("=" * 72)
     print("# Table 2 analogue: compression (bits/triple, ID space)")
@@ -118,6 +142,23 @@ def main() -> None:
         with open(args.json, "w") as fh:
             json.dump(results, fh, indent=2, default=float)
         print(f"# wrote {args.json}")
+    if tracer is not None and args.trace is not None:
+        with open(args.trace, "w") as fh:
+            json.dump(tracer.to_chrome(metadata=results["provenance"]), fh)
+        print(f"# wrote {args.trace} ({tracer.dropped} spans dropped)")
+    if metrics is not None and args.metrics is not None:
+        with open(args.metrics, "w") as fh:
+            json.dump(
+                {
+                    "provenance": results["provenance"],
+                    "metrics": metrics.snapshot(),
+                    "prometheus": metrics.to_prometheus(),
+                },
+                fh, indent=2, default=float,
+            )
+        print(f"# wrote {args.metrics}")
+    if tracer is not None or metrics is not None:
+        obs.disable()
 
 
 if __name__ == "__main__":

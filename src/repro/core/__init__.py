@@ -10,7 +10,7 @@
 
 def __getattr__(name):
     if name in (
-        "ExecConfig", "CapPolicy", "CapOverflow", "Plan",
+        "ExecConfig", "ObsConfig", "CapPolicy", "CapOverflow", "Plan",
         "TriplePatternQ", "JoinQ", "BgpQ", "ServeQ",
     ):
         from repro.core import query

@@ -58,8 +58,10 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import obs
 from repro.compat import shard_map
 from repro.core import joins, k2forest, patterns, predindex, query as qapi
+from repro.obs import cost as obs_cost
 from repro.core.k2forest import K2Forest
 from repro.core.k2tree import _compact
 from repro.core.k2triples import K2TriplesStore
@@ -120,6 +122,15 @@ def host_result(r: ServeResult, *, unbounded: bool = True) -> ServeResult:
     largest transfer (``[B, L, cap]``) — for batches the caller knows
     carry no unbounded-``?P`` lanes.
     """
+    t = obs.STATE.tracer
+    if t is None:
+        return _host_result(r, unbounded)
+    with t.span("engine.fetch", cat="engine",
+                b=int(r.ids.shape[0]), unbounded=unbounded):
+        return _host_result(r, unbounded)
+
+
+def _host_result(r: ServeResult, unbounded: bool) -> ServeResult:
     jax.block_until_ready(r.ids)
     b = r.ids.shape[0]
     if unbounded:
@@ -147,6 +158,14 @@ def decode_lane(op: int, r: ServeResult, i: int):
     tenant's queries as their lanes decode instead of materializing a
     batch-level result object.
     """
+    t = obs.STATE.tracer
+    if t is None:
+        return _decode_lane(op, r, i)
+    with t.span("plan.decode_lane", cat="plan", op=int(op)):
+        return _decode_lane(op, r, i)
+
+
+def _decode_lane(op: int, r: ServeResult, i: int):
     if op == OP_CHECK:
         return bool(r.hit[i])
     if op in (OP_ROW, OP_COL, OP_S_ANY_O):
@@ -569,6 +588,22 @@ class _ExecBase:
         self.cap_y = cfg.cap_y
 
     def _grow(self, fn):
+        t, m = obs.STATE.tracer, obs.STATE.metrics
+        if t is not None or m is not None:
+            inner = fn
+
+            def fn(cap, cap_y):
+                try:
+                    return inner(cap, cap_y)
+                except CapOverflow:
+                    # the policy loop will recompile at doubled caps —
+                    # that retry is the event worth counting
+                    if m is not None:
+                        m.counter("plan.cap_overflow").inc()
+                    if t is not None:
+                        t.instant("plan.cap_overflow", cap=cap, cap_y=cap_y)
+                    raise
+
         out, self.cap, self.cap_y = qapi.run_with_policy(
             self.cfg.cap_policy, self.cap, self.cap_y, fn
         )
@@ -582,6 +617,11 @@ class _ExecBase:
 
     def compiled_text(self, q, batch):
         raise NotImplementedError(f"{type(self).__name__} has no HLO view")
+
+    def cost_profile(self, q, batch):
+        raise NotImplementedError(
+            f"{type(self).__name__} has no compiled-program cost surface"
+        )
 
     @staticmethod
     def _overflow_guard(r):
@@ -880,8 +920,18 @@ class _ServeExec(_ExecBase):
         batch = self._coerce(batch)
 
         def fn(cap, _):
-            r = self._call(batch, cap, q.unbounded)
-            self._overflow_guard(r)
+            t = obs.STATE.tracer
+            if t is None:
+                r = self._call(batch, cap, q.unbounded)
+                self._overflow_guard(r)
+                return r
+            with t.span("plan.call", cat="plan",
+                        b=int(batch.op.shape[0]), cap=cap,
+                        unbounded=q.unbounded):
+                with t.span("plan.dispatch", cat="plan"):
+                    r = self._call(batch, cap, q.unbounded)
+                with t.span("plan.sync", cat="plan"):
+                    self._overflow_guard(r)
             return r
 
         return self._grow(fn)
@@ -892,7 +942,13 @@ class _ServeExec(_ExecBase):
         (``launch.broker`` handles both per tenant).  The executor's cap
         never grows through this path, so a shared base plan stays at its
         configured geometry no matter what overflows ride through it."""
-        return self._call(self._coerce(batch), self.cap, q.unbounded)
+        t = obs.STATE.tracer
+        if t is None:
+            return self._call(self._coerce(batch), self.cap, q.unbounded)
+        batch = self._coerce(batch)
+        with t.span("plan.submit", cat="plan", b=int(batch.op.shape[0]),
+                    cap=self.cap, unbounded=q.unbounded):
+            return self._call(batch, self.cap, q.unbounded)
 
     def _args(self, qb, cap, unbounded):
         eng, cfg = self.engine, self.cfg
@@ -920,6 +976,48 @@ class _ServeExec(_ExecBase):
         sharded-smoke 'no all-gather on the wire' check)."""
         fn, args = self._args(batch, self.cap, q.unbounded)
         return fn.lower(*args).compile().as_text()
+
+    def _u_width_of(self, unbounded: bool) -> int:
+        """The unbounded-lane width the current program geometry carries
+        (mirrors :meth:`_args` without building the program)."""
+        if not unbounded:
+            return 0
+        eng, cfg = self.engine, self.cfg
+        if eng.store.pred_index is None or not cfg.use_pred_index:
+            return max(eng.store.n_preds, 1)
+        return eng._u_width(cfg)
+
+    def cost_profile(self, q: ServeQ, batch=None) -> dict:
+        """Static XLA cost profile of the serve program this plan would
+        dispatch for ``batch`` (8 pow2-padded lanes when ``None``) —
+        cached per program geometry in the engine's program cache."""
+        eng, cfg = self.engine, self.cfg
+        if batch is None:
+            b = eng._pad_b(1, cfg)
+            z = np.zeros(b, np.int32)
+            batch = ServeBatch(op=z, s=z, p=z, o=z)
+        batch = self._coerce(batch)
+        b = int(batch.op.shape[0])
+        u_width = self._u_width_of(q.unbounded)
+        key = (
+            "cost_profile", cfg.backend, cfg.interpret, cfg.mesh,
+            cfg.data_axes, cfg.model_axis, self.cap, u_width, b,
+            q.unbounded,
+        )
+        prof = eng._programs.get(key)
+        if prof is None:
+            fn, args = self._args(batch, self.cap, q.unbounded)
+            geometry = {
+                "lanes": b,
+                "cap": self.cap,
+                "u_width": u_width,
+                "unbounded": q.unbounded,
+                "backend": cfg.backend,
+                "sharded": cfg.mesh is not None,
+            }
+            prof = obs_cost.profile_jit(fn, args, geometry)
+            eng._programs[key] = prof
+        return dict(prof)
 
 
 # ---------------------------------------------------------------------------
@@ -959,7 +1057,7 @@ class Engine:
         default_factory=dict, repr=False, compare=False
     )
     _stats: dict = dataclasses.field(
-        default_factory=lambda: {"hits": 0, "misses": 0},
+        default_factory=lambda: {"hits": 0, "misses": 0, "denied": 0},
         repr=False, compare=False,
     )
     _env_cfg: ExecConfig | None = dataclasses.field(
@@ -1013,17 +1111,33 @@ class Engine:
         cfg = (config or self.default_config).resolved()
         self._validate(q, cfg)
         key = (qapi.shape_key(q), cfg)
+        t, m = obs.STATE.tracer, obs.STATE.metrics
         ex = self._plan_cache.get(key)
         if ex is None:
             if admit is not None and not admit(key):
+                self._stats["denied"] += 1
+                if m is not None:
+                    m.counter("engine.plan_cache.denied").inc()
+                if t is not None:
+                    t.instant("engine.admission_denied", shape=str(key[0]))
                 raise qapi.AdmissionError(
                     f"plan-cache admission denied for {key[0]!r}"
                 )
             self._stats["misses"] += 1
-            ex = self._build_executor(q, cfg)
+            if m is not None:
+                m.counter("engine.plan_cache.misses").inc()
+            if t is not None:
+                with t.span("engine.compile", cat="engine",
+                            shape=str(key[0]), backend=cfg.backend,
+                            cap=cfg.cap, hit=False):
+                    ex = self._build_executor(q, cfg)
+            else:
+                ex = self._build_executor(q, cfg)
             self._plan_cache[key] = ex
         else:
             self._stats["hits"] += 1
+            if m is not None:
+                m.counter("engine.plan_cache.hits").inc()
         return Plan(q, cfg, ex)
 
     def _validate(self, q, cfg: ExecConfig):
@@ -1133,17 +1247,24 @@ class Engine:
         )
         fn = self._programs.get(key)
         if fn is None:
-            pmeta = self.store.pred_index.meta if with_index else None
-            if cfg.mesh is None:
-                fn = make_serve_step(
-                    self.meta, cap, backend=cfg, pmeta=pmeta, u_width=u_width
-                )
-            else:
-                fn = make_sharded_serve_step(
-                    self.meta, cfg.mesh, cap, data_axes=cfg.data_axes,
-                    model_axis=cfg.model_axis, backend=cfg, pmeta=pmeta,
-                    u_width=u_width,
-                )
+            m = obs.STATE.metrics
+            if m is not None:
+                m.counter("engine.programs_built").inc()
+            with obs.span("engine.program_build", cat="engine",
+                          cap=cap, u_width=u_width, with_index=with_index,
+                          sharded=cfg.mesh is not None):
+                pmeta = self.store.pred_index.meta if with_index else None
+                if cfg.mesh is None:
+                    fn = make_serve_step(
+                        self.meta, cap, backend=cfg, pmeta=pmeta,
+                        u_width=u_width
+                    )
+                else:
+                    fn = make_sharded_serve_step(
+                        self.meta, cfg.mesh, cap, data_axes=cfg.data_axes,
+                        model_axis=cfg.model_axis, backend=cfg, pmeta=pmeta,
+                        u_width=u_width,
+                    )
             self._programs[key] = fn
         return fn
 
@@ -1172,6 +1293,23 @@ class Engine:
         """
         b = int(np.shape(ops_a)[0])
         n = self._pad_b(b, cfg)
+        t = obs.STATE.tracer
+        if t is not None:
+            with t.span("plan.lanes", cat="plan", b=b, padded=n, cap=cap,
+                        u_width=u_width, sharded=cfg.mesh is not None):
+                return self._run_lanes_inner(
+                    cfg, cap, ops_a, s, p, o, b=b, n=n,
+                    u_width=u_width, with_index=with_index,
+                )
+        return self._run_lanes_inner(
+            cfg, cap, ops_a, s, p, o, b=b, n=n,
+            u_width=u_width, with_index=with_index,
+        )
+
+    def _run_lanes_inner(
+        self, cfg: ExecConfig, cap: int, ops_a, s, p, o,
+        *, b: int, n: int, u_width: int, with_index: bool,
+    ) -> ServeResult:
 
         def pad(a, fill):
             out = np.full(n, fill, np.int32)

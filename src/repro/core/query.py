@@ -197,6 +197,41 @@ class ExecConfig:
         return dataclasses.replace(self, **kw)
 
 
+@dataclasses.dataclass(frozen=True)
+class ObsConfig:
+    """Frozen observability config — the knobs behind ``repro.obs.enable``.
+
+    ``trace``
+        Record host-side spans into a ring-buffered tracer (exported as
+        Chrome ``trace_event`` JSON, loadable in Perfetto).
+    ``metrics``
+        Record timing histograms / gauges into the global
+        ``repro.obs`` metrics registry.  (The broker's own bookkeeping
+        registry backing ``ServeBroker.stats()`` is always on; this knob
+        governs only the obs-layer extras.)
+    ``trace_capacity``
+        Ring size in spans; when full, the OLDEST spans are dropped and
+        counted — a long run degrades to a suffix window, never to
+        back-pressure.
+    ``device_annotations``
+        Bridge live spans into ``jax.profiler.TraceAnnotation`` so a
+        device profile captured around the same run carries the same
+        span names.
+    """
+
+    trace: bool = True
+    metrics: bool = True
+    trace_capacity: int = 1 << 16
+    device_annotations: bool = False
+
+    def __post_init__(self):
+        if self.trace_capacity < 1:
+            raise ValueError("trace_capacity must be >= 1")
+
+    def replace(self, **kw) -> "ObsConfig":
+        return dataclasses.replace(self, **kw)
+
+
 def run_with_policy(policy: CapPolicy, cap: int, cap_y: int, fn):
     """Run ``fn(cap, cap_y)`` under the cap policy.
 
@@ -378,6 +413,13 @@ class Plan:
         executor exposes one, e.g. ``ServeQ``) — for asserting
         communication properties like 'no all-gather on the wire'."""
         return self._executor.compiled_text(self.query, batch)
+
+    def cost_profile(self, batch=None) -> dict:
+        """Static compile-time cost profile of the underlying program
+        (where the executor exposes one, e.g. ``ServeQ``): XLA
+        ``cost_analysis`` FLOPs/bytes, memory stats, and the lanes × cap
+        geometry — see ``repro.obs.cost``.  Cached per program geometry."""
+        return self._executor.cost_profile(self.query, batch)
 
     def __repr__(self):
         return (

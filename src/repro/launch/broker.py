@@ -74,10 +74,12 @@ import time
 
 import numpy as np
 
+from repro import obs
 from repro.core import engine as eng
 from repro.core.query import (
     AdmissionError, CapOverflow, CapPolicy, ExecConfig, ServeQ,
 )
+from repro.obs import LATENCY_MS_BUCKETS, MetricsRegistry
 
 __all__ = [
     "CoalescePolicy", "TenantPolicy", "QueueFull", "ServeBroker",
@@ -167,6 +169,25 @@ class _Req:
     o: int
     t_submit: float
     future: asyncio.Future
+    seq: int = 0  # global submission sequence — the per-query trace id
+    t_deliver: float = 0.0  # stamped at resolve/fail time
+
+
+@dataclasses.dataclass
+class _BatchMeta:
+    """Timeline of one dispatched batch (``time.perf_counter`` seconds):
+    coalesce ``[tc0, tc1]`` → encode+dispatch ``[td0, td1]`` → inflight →
+    fetch ``[tf0, tf1]`` → decode/deliver.  Feeds the retroactive trace
+    spans emitted once the batch fully delivers."""
+
+    bid: int
+    n_padded: int
+    tc0: float = 0.0
+    tc1: float = 0.0
+    td0: float = 0.0
+    td1: float = 0.0
+    tf0: float = 0.0
+    tf1: float = 0.0
 
 
 @dataclasses.dataclass
@@ -226,8 +247,23 @@ class ServeBroker:
         self._task: asyncio.Task | None = None
         self._draining = False
         self._running = False
-        self._stats = collections.Counter()
+        # ALWAYS-ON bookkeeping registry backing ``stats()`` — the typed
+        # replacement for the old ad-hoc ``collections.Counter``.  The
+        # obs-layer extras (timing histograms, spans) live in the global
+        # ``repro.obs`` state and only run while observability is enabled.
+        self.metrics = MetricsRegistry()
+        self._c = {
+            name: self.metrics.counter(f"broker.{name}")
+            for name in (
+                "batches", "lanes", "flush_size", "flush_deadline",
+                "flush_drain", "shed", "cap_growth_events",
+                "admission_denials",
+            )
+        }
         self._queue_peak = 0
+        self._seq = 0  # per-query trace ids
+        self._bid = 0  # batch ids
+        self._retry_cfgs: set[ExecConfig] = set()  # cap levels ever compiled
 
     # -- lifecycle ------------------------------------------------------
 
@@ -269,7 +305,7 @@ class ServeBroker:
         st = self._tenant(tenant)
         if st.pending >= self.tenant_policy.queue_depth:
             st.shed += 1
-            self._stats["shed"] += 1
+            self._c["shed"].inc()
             raise QueueFull(
                 f"tenant {tenant!r} at queue_depth="
                 f"{self.tenant_policy.queue_depth}; shed-newest"
@@ -278,8 +314,9 @@ class ServeBroker:
         fut = asyncio.get_running_loop().create_future()
         self._queue.append(
             _Req(tenant, int(op), int(s), int(p), int(o),
-                 time.perf_counter(), fut)
+                 time.perf_counter(), fut, seq=self._seq)
         )
+        self._seq += 1
         self._queue_peak = max(self._queue_peak, len(self._queue))
         self._wake.set()
         return fut
@@ -315,21 +352,24 @@ class ServeBroker:
             if len(self._inflight) >= self.coalesce.max_inflight:
                 await self._deliver(*self._inflight.popleft())
                 continue
-            reqs = await self._collect(block=not self._inflight)
+            reqs, tc0, tc1 = await self._collect(block=not self._inflight)
             if reqs:
-                self._dispatch(reqs)
+                self._dispatch(reqs, tc0, tc1)
             elif self._inflight:
                 await self._deliver(*self._inflight.popleft())
             elif self._draining and not self._queue:
                 return
 
-    async def _collect(self, *, block: bool) -> list[_Req]:
+    async def _collect(self, *, block: bool):
+        """Coalesce: returns ``(reqs, tc0, tc1)`` — the collected batch
+        plus the perf-counter window the coalesce wait spanned."""
         pol = self.coalesce
         while not self._queue:
             if not block or self._draining:
-                return []
+                return [], 0.0, 0.0
             self._wake.clear()
             await self._wake.wait()
+        tc0 = time.perf_counter()
         # deadline of the OLDEST pending request governs the flush
         deadline = self._queue[0].t_submit + pol.max_delay_s
         while len(self._queue) < pol.max_batch and not self._draining:
@@ -342,20 +382,36 @@ class ServeBroker:
             except asyncio.TimeoutError:
                 break
         if len(self._queue) >= pol.max_batch:
-            self._stats["flush_size"] += 1
+            self._c["flush_size"].inc()
         elif self._draining:
-            self._stats["flush_drain"] += 1
+            self._c["flush_drain"].inc()
         else:
-            self._stats["flush_deadline"] += 1
+            self._c["flush_deadline"].inc()
         n = min(len(self._queue), pol.max_batch)
-        return [self._queue.popleft() for _ in range(n)]
+        return [self._queue.popleft() for _ in range(n)], tc0, time.perf_counter()
 
-    def _dispatch(self, reqs: list[_Req]):
+    def _dispatch(self, reqs: list[_Req], tc0: float = 0.0, tc1: float = 0.0):
+        td0 = time.perf_counter()
         qb = self._encode(reqs, self._pad_to)
         raw = self.base_plan.submit(qb)  # async device dispatch, no sync
-        self._inflight.append((raw, reqs))
-        self._stats["batches"] += 1
-        self._stats["lanes"] += len(reqs)
+        meta = _BatchMeta(
+            bid=self._bid, n_padded=int(qb.op.shape[0]),
+            tc0=tc0 or td0, tc1=tc1 or td0, td0=td0,
+            td1=time.perf_counter(),
+        )
+        self._bid += 1
+        self._inflight.append((raw, reqs, meta))
+        self._c["batches"].inc()
+        self._c["lanes"].inc(len(reqs))
+        m = obs.STATE.metrics
+        if m is not None:
+            m.histogram("broker.batch_occupancy").observe(
+                len(reqs) / meta.n_padded
+            )
+            m.gauge("broker.queue_depth").set(len(self._queue))
+            h = m.histogram("broker.queue_wait_ms", LATENCY_MS_BUCKETS)
+            for r in reqs:
+                h.observe((td0 - r.t_submit) * 1e3)
 
     def _encode(self, reqs: list[_Req], pad_to: int) -> eng.ServeBatch:
         n = max(pad_to, self._padded_batch(len(reqs)))
@@ -380,13 +436,15 @@ class ServeBroker:
 
     # -- streamed decode + per-tenant growth ----------------------------
 
-    async def _deliver(self, raw, reqs: list[_Req]):
+    async def _deliver(self, raw, reqs: list[_Req], meta: _BatchMeta):
         has_u = any(r.op in eng._UNBOUNDED_OPS for r in reqs)
+        meta.tf0 = time.perf_counter()
         # the blocking device->host fetch runs off-loop so submitters keep
         # filling the next batch while this one decodes
         host = await asyncio.to_thread(
             eng.host_result, raw, unbounded=has_u and self.unbounded
         )
+        meta.tf1 = time.perf_counter()
         retry_tenants = {
             reqs[i].tenant
             for i in np.nonzero(host.overflow[: len(reqs)])[0]
@@ -401,12 +459,62 @@ class ServeBroker:
             # retried lane is held and re-released in submission order
             segment = [(i, r) for i, r in enumerate(reqs) if r.tenant == tenant]
             await self._retry_tenant(tenant, segment, host)
+        if obs.STATE.tracer is not None:
+            self._trace_batch(reqs, meta)
+
+    def _trace_batch(self, reqs: list[_Req], meta: _BatchMeta):
+        """Emit the batch's retroactive spans now that every timestamp of
+        its lifetime is known.
+
+        Batch stages land as complete spans on a bounded pool of
+        ``batch-slot-*`` tracks (slot = ``bid`` mod ``2 * max_inflight``
+        — the inflight bound guarantees a slot's previous occupant fully
+        delivered before reuse, so same-track spans never overlap).  Each
+        query's lifetime lands as Chrome *async* events keyed by its
+        ``seq``, phases nested by time under one ``query`` umbrella:
+        queue → dispatch → inflight → fetch → decode.
+        """
+        t = obs.STATE.tracer
+        ns = lambda sec: int(sec * 1e9)  # noqa: E731 — perf_counter s -> ns
+        t_end = time.perf_counter()
+        slot = f"batch-slot-{meta.bid % (2 * self.coalesce.max_inflight)}"
+        occupancy = len(reqs) / meta.n_padded
+        t.add("broker.batch", ns(meta.tc0), ns(t_end), tid=slot, cat="broker",
+              bid=meta.bid, lanes=len(reqs), padded=meta.n_padded,
+              occupancy=round(occupancy, 4))
+        for name, a, b in (
+            ("broker.coalesce", meta.tc0, meta.tc1),
+            ("broker.dispatch", meta.td0, meta.td1),
+            ("broker.inflight", meta.td1, meta.tf0),
+            ("broker.fetch", meta.tf0, meta.tf1),
+            ("broker.decode_deliver", meta.tf1, t_end),
+        ):
+            t.add(name, ns(a), ns(b), tid=slot, cat="broker", bid=meta.bid)
+        for i, r in enumerate(reqs):
+            td = r.t_deliver or t_end
+            t.add_async("query", r.seq, ns(r.t_submit), ns(td),
+                        tenant=r.tenant, op=r.op, lane=i, bid=meta.bid)
+            for name, a, b in (
+                ("queue", r.t_submit, meta.td0),
+                ("dispatch", meta.td0, meta.td1),
+                ("inflight", meta.td1, meta.tf0),
+                ("fetch", meta.tf0, meta.tf1),
+                ("decode", meta.tf1, td),
+            ):
+                t.add_async(name, r.seq, ns(a), ns(min(b, td)))
 
     def _resolve(self, r: _Req, value):
         st = self._tenants[r.tenant]
         st.pending -= 1
         st.completed += 1
-        st.lat_s.append(time.perf_counter() - r.t_submit)
+        r.t_deliver = time.perf_counter()
+        lat = r.t_deliver - r.t_submit
+        st.lat_s.append(lat)
+        m = obs.STATE.metrics
+        if m is not None:
+            m.histogram(
+                "broker.query_latency_ms", LATENCY_MS_BUCKETS
+            ).observe(lat * 1e3)
         if not r.future.cancelled():
             r.future.set_result(value)
 
@@ -414,6 +522,7 @@ class ServeBroker:
         st = self._tenants[r.tenant]
         st.pending -= 1
         st.failed += 1
+        r.t_deliver = time.perf_counter()
         if not r.future.cancelled():
             r.future.set_exception(exc)
 
@@ -456,16 +565,19 @@ class ServeBroker:
                 )
             except AdmissionError:
                 st.admission_denials += 1
-                self._stats["admission_denials"] += 1
+                self._c["admission_denials"].inc()
                 raise
             st.cap_growth_events += 1
-            self._stats["cap_growth_events"] += 1
+            self._c["cap_growth_events"].inc()
             st.cap_level = max(st.cap_level, level)
-            qb = self._encode(rs, 0)
-            host = eng.host_result(
-                plan.submit(qb),
-                unbounded=any(r.op in eng._UNBOUNDED_OPS for r in rs),
-            )
+            self._retry_cfgs.add(cfg)
+            with obs.span("broker.retry", cat="broker", tenant=tenant,
+                          level=level, cap=cap, lanes=len(rs)):
+                qb = self._encode(rs, 0)
+                host = eng.host_result(
+                    plan.submit(qb),
+                    unbounded=any(r.op in eng._UNBOUNDED_OPS for r in rs),
+                )
             if not host.overflow[: len(rs)].any():
                 return [
                     eng.decode_lane(r.op, host, i) for i, r in enumerate(rs)
@@ -493,33 +605,36 @@ class ServeBroker:
     # -- stats ----------------------------------------------------------
 
     def reset_stats(self) -> None:
-        """Zero counters and latency samples — the benchmark warmup
-        boundary.  Admission state (cap levels, plan charges) is retained:
-        it is real broker state, not measurement."""
-        self._stats.clear()
+        """Zero EVERY counter ``stats()`` reports, global and per-tenant
+        (flush reasons, shed / cap-growth / admission-denial counts, queue
+        peak, latency samples) — the benchmark warmup boundary.  Admission
+        STATE (``cap_level``, ``plans_charged``) is retained: those are
+        live budgets governing future admissions, not measurements."""
+        self.metrics.reset()
         self._queue_peak = 0
         for st in self._tenants.values():
             st.lat_s.clear()
             st.completed = st.failed = st.shed = 0
+            st.cap_growth_events = st.admission_denials = 0
 
     def stats(self) -> dict:
         """Structured serving stats (JSON-ready)."""
         all_lat = [t for st in self._tenants.values() for t in st.lat_s]
-        batches = int(self._stats["batches"])
+        batches = self._c["batches"].value
         return {
             "batches": batches,
-            "lanes": int(self._stats["lanes"]),
+            "lanes": self._c["lanes"].value,
             "coalesce_factor": (
-                self._stats["lanes"] / batches if batches else 0.0
+                self._c["lanes"].value / batches if batches else 0.0
             ),
-            "flush_size": int(self._stats["flush_size"]),
-            "flush_deadline": int(self._stats["flush_deadline"]),
-            "flush_drain": int(self._stats["flush_drain"]),
+            "flush_size": self._c["flush_size"].value,
+            "flush_deadline": self._c["flush_deadline"].value,
+            "flush_drain": self._c["flush_drain"].value,
             "queue_depth": len(self._queue),
             "queue_peak": self._queue_peak,
-            "shed": int(self._stats["shed"]),
-            "cap_growth_events": int(self._stats["cap_growth_events"]),
-            "admission_denials": int(self._stats["admission_denials"]),
+            "shed": self._c["shed"].value,
+            "cap_growth_events": self._c["cap_growth_events"].value,
+            "admission_denials": self._c["admission_denials"].value,
             "queries": len(all_lat),
             "p50_ms": _ms(tail_percentile(all_lat, 50)),
             "p99_ms": _ms(tail_percentile(all_lat, 99)),
@@ -538,6 +653,21 @@ class ServeBroker:
                 for name, st in sorted(self._tenants.items())
             },
         }
+
+    def cost_profiles(self) -> dict:
+        """Static XLA cost profiles of every program this broker has
+        served through: the shared base plan at its dispatch geometry,
+        plus each doubled-cap retry level any tenant ever compiled
+        (cache hits — profiling never charges admission quotas)."""
+        out = {"base": self.base_plan.cost_profile(
+            self._encode([], self._pad_to)
+        )}
+        for cfg in sorted(self._retry_cfgs, key=lambda c: c.cap):
+            plan = self.engine.compile(self._query, cfg)
+            out[f"retry_cap_{cfg.cap}"] = plan.cost_profile(
+                self._encode([], 0)
+            )
+        return out
 
 
 def _ms(v: float | None) -> float | None:

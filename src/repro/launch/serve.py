@@ -29,6 +29,7 @@ import time
 
 import numpy as np
 
+from repro import obs
 from repro.launch.broker import (
     CoalescePolicy, ServeBroker, TenantPolicy, tail_percentile,
 )
@@ -112,9 +113,19 @@ def run_bench(
     warmup: int = 64,
     seed: int = 0,
     quiet: bool = False,
+    trace_path: str | None = None,
+    metrics_path: str | None = None,
+    obs_on: bool = False,
 ) -> dict:
     """Build a store, serve a skewed multi-tenant trace through the
-    broker, and return one machine-readable serving row."""
+    broker, and return one machine-readable serving row.
+
+    ``trace_path`` / ``metrics_path`` / ``obs_on`` switch the
+    observability layer on for the measured window (trace and metrics
+    are cleared at the warmup boundary, together with the broker's own
+    stats, so exports describe exactly the run the row reports):
+    ``trace_path`` gets the Chrome ``trace_event`` JSON, ``metrics_path``
+    the metrics snapshot + per-plan cost profiles + Prometheus text."""
     import jax
 
     from repro.core import engine as eng, k2triples
@@ -172,6 +183,13 @@ def run_bench(
     # "time through the broker", not "time parked in an unbounded queue"
     depth = max(16, (2 * max_batch) // max(n_tenants, 1))
 
+    obs_enabled = obs_on or trace_path is not None or metrics_path is not None
+    tracer = metrics = None
+    if obs_enabled:
+        from repro.core.query import ObsConfig
+
+        tracer, metrics = obs.enable(ObsConfig(trace=True, metrics=True))
+
     async def main():
         broker = ServeBroker(
             engine, cfg, unbounded=unbounded,
@@ -184,12 +202,26 @@ def run_bench(
             # warmup: compile the serve program + prime every op type
             await _replay(broker, trace[: min(warmup, len(trace))])
             broker.reset_stats()
+            if tracer is not None:
+                tracer.clear()
+            if metrics is not None:
+                metrics.reset()
             t0 = time.perf_counter()
             n_done = await _replay(broker, trace)
             wall = time.perf_counter() - t0
-        return broker.stats(), n_done, wall
+        return broker, broker.stats(), n_done, wall
 
-    stats, n_done, wall = asyncio.run(main())
+    try:
+        broker, stats, n_done, wall = asyncio.run(main())
+        if obs_enabled:
+            _export_obs(
+                broker, engine, tracer, metrics,
+                trace_path=trace_path, metrics_path=metrics_path,
+                quiet=quiet,
+            )
+    finally:
+        if obs_enabled:
+            obs.disable()
     assert n_done == n_queries, (n_done, n_queries)
     row = {
         "mode": "sharded" if sharded else "single",
@@ -214,11 +246,40 @@ def run_bench(
         "shed": stats["shed"],
         "cap_growth_events": stats["cap_growth_events"],
         "queue_peak": stats["queue_peak"],
+        "obs": obs_enabled,
         "per_tenant": stats["tenants"],
     }
     if not quiet:
         print(format_row(row))
     return row
+
+
+def _export_obs(broker, engine, tracer, metrics, *, trace_path, metrics_path,
+                quiet):
+    """Write the run's observability exports: Chrome trace JSON and a
+    metrics document (broker + obs registries, plan-cache stats, per-plan
+    cost profiles, Prometheus text exposition)."""
+    if trace_path is not None and tracer is not None:
+        with open(trace_path, "w") as fh:
+            json.dump(tracer.to_chrome(metadata=obs.provenance()), fh)
+        if not quiet:
+            print(f"# wrote {trace_path} ({tracer.dropped} spans dropped)")
+    if metrics_path is not None:
+        doc = {
+            "provenance": obs.provenance(),
+            "broker": broker.metrics.snapshot(),
+            "obs": metrics.snapshot() if metrics is not None else {},
+            "plan_cache": engine.plan_cache_stats,
+            "cost_profiles": broker.cost_profiles(),
+            "prometheus": (
+                broker.metrics.to_prometheus()
+                + (metrics.to_prometheus() if metrics is not None else "")
+            ),
+        }
+        with open(metrics_path, "w") as fh:
+            json.dump(doc, fh, indent=2, default=float)
+        if not quiet:
+            print(f"# wrote {metrics_path}")
 
 
 def format_row(row: dict) -> str:
@@ -263,6 +324,23 @@ def main(argv=None) -> None:
         "--json", metavar="PATH", default=None,
         help="write the serving rows as JSON ({'serving': [...]})",
     )
+    ap.add_argument(
+        "--trace", nargs="?", const="serve_trace.json", default=None,
+        metavar="PATH",
+        help="enable tracing; write Chrome trace_event JSON "
+             "(default PATH: serve_trace.json — load it in Perfetto)",
+    )
+    ap.add_argument(
+        "--metrics", nargs="?", const="serve_metrics.json", default=None,
+        metavar="PATH",
+        help="enable metrics; write snapshot + cost profiles + Prometheus "
+             "text (default PATH: serve_metrics.json)",
+    )
+    ap.add_argument(
+        "--obs-overhead", action="store_true",
+        help="run the bench twice (observability off, then on) and report "
+             "the p50/qps overhead of tracing",
+    )
     args = ap.parse_args(argv)
 
     kw = dict(
@@ -278,13 +356,36 @@ def main(argv=None) -> None:
             cap=256, warmup=32,
         )
     try:
-        row = run_bench(**kw)
+        if args.obs_overhead:
+            rows = [run_bench(**kw)]
+            rows.append(run_bench(
+                **kw, obs_on=True,
+                trace_path=args.trace, metrics_path=args.metrics,
+            ))
+            off, on = rows
+            print(format_overhead(off, on))
+        else:
+            rows = [run_bench(
+                **kw, trace_path=args.trace, metrics_path=args.metrics,
+            )]
     except ValueError as e:
         raise SystemExit(f"error: {e}")
     if args.json:
         with open(args.json, "w") as fh:
-            json.dump({"serving": [row]}, fh, indent=2, default=float)
+            json.dump({"serving": rows}, fh, indent=2, default=float)
         print(f"# wrote {args.json}")
+
+
+def format_overhead(off: dict, on: dict) -> str:
+    """One-line tracing-overhead report from an off/on run pair."""
+    parts = [f"obs overhead: qps {off['qps']:,.0f} -> {on['qps']:,.0f} "
+             f"({(off['qps'] - on['qps']) / off['qps'] * 100:+.1f}%)"]
+    if off["p50_ms"] is not None and on["p50_ms"] is not None:
+        parts.append(
+            f"p50 {off['p50_ms']:.3f} -> {on['p50_ms']:.3f} ms "
+            f"({(on['p50_ms'] - off['p50_ms']) / off['p50_ms'] * 100:+.1f}%)"
+        )
+    return ", ".join(parts)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,135 @@
+"""repro.obs — tracing, metrics, and cost profiling for the serve stack.
+
+One process-global observability state (``STATE``) holds an optional
+:class:`~repro.obs.trace.Tracer` and an optional
+:class:`~repro.obs.metrics.MetricsRegistry`.  Both default to ``None`` —
+observability OFF — and every instrumentation site in the engine and the
+broker guards on that ``None`` before doing anything: the disabled cost
+of a site is one attribute read and one branch (tripwire-tested in
+``tests/test_obs.py``, the same discipline PR 5 applied to env reads
+inside compiled plan calls).
+
+Enable with :func:`enable` (optionally with an
+:class:`~repro.core.query.ObsConfig`), tear down with :func:`disable`::
+
+    tracer, metrics = obs.enable()
+    ...serve...
+    json.dump(tracer.to_chrome(), fh)
+    print(metrics.to_prometheus())
+    obs.disable()
+
+:func:`span` is the one-liner for instrumentation sites that just want a
+context manager: it returns the shared no-op span when tracing is off.
+"""
+
+from __future__ import annotations
+
+from repro.obs.metrics import (  # noqa: F401  (re-exports)
+    Counter,
+    DEFAULT_BUCKETS,
+    Gauge,
+    Histogram,
+    LATENCY_MS_BUCKETS,
+    MetricsRegistry,
+    log_buckets,
+)
+from repro.obs.trace import NOOP_SPAN, Tracer  # noqa: F401
+
+__all__ = [
+    "STATE", "enable", "disable", "enabled", "span", "provenance",
+    "Tracer", "NOOP_SPAN",
+    "MetricsRegistry", "Counter", "Gauge", "Histogram", "log_buckets",
+    "DEFAULT_BUCKETS", "LATENCY_MS_BUCKETS",
+]
+
+
+class _State:
+    """Global observability switches.  ``None`` means OFF."""
+
+    __slots__ = ("tracer", "metrics")
+
+    def __init__(self):
+        self.tracer: Tracer | None = None
+        self.metrics: MetricsRegistry | None = None
+
+
+STATE = _State()
+
+
+def enabled() -> bool:
+    return STATE.tracer is not None or STATE.metrics is not None
+
+
+def enable(config=None):
+    """Turn observability on; returns ``(tracer, metrics)``.
+
+    ``config`` is an :class:`repro.core.query.ObsConfig` (imported lazily
+    here — ``repro.core`` imports this package, not the other way round);
+    ``None`` enables both tracing and metrics with defaults.  Either
+    component can be ``None`` in the result if the config disabled it.
+    """
+    if config is None:
+        from repro.core.query import ObsConfig
+
+        config = ObsConfig()
+    STATE.tracer = (
+        Tracer(config.trace_capacity, annotate=config.device_annotations)
+        if config.trace
+        else None
+    )
+    STATE.metrics = MetricsRegistry() if config.metrics else None
+    return STATE.tracer, STATE.metrics
+
+
+def disable() -> None:
+    """Turn observability off (instrumentation reverts to the no-op path)."""
+    STATE.tracer = None
+    STATE.metrics = None
+
+
+def span(name: str, **attrs):
+    """Context manager for one span; the shared no-op when tracing is off."""
+    t = STATE.tracer
+    return NOOP_SPAN if t is None else t.span(name, **attrs)
+
+
+def provenance() -> dict:
+    """Self-describing run header: git SHA, UTC timestamp, jax version,
+    backend, device kind/count.  Embedded in benchmark JSON and trace
+    exports so a committed number can always be tied back to the code and
+    hardware that produced it.  Every field is best-effort."""
+    import datetime
+
+    out = {
+        "utc": datetime.datetime.now(datetime.timezone.utc).isoformat(
+            timespec="seconds"
+        ),
+    }
+    try:
+        import os
+        import subprocess
+
+        # anchor git to the package's own checkout, not the process cwd
+        here = os.path.dirname(os.path.abspath(__file__))
+        out["git_sha"] = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=5, check=True, cwd=here,
+        ).stdout.strip()
+        dirty = subprocess.run(
+            ["git", "status", "--porcelain"], capture_output=True,
+            text=True, timeout=5, check=True, cwd=here,
+        ).stdout.strip()
+        out["git_dirty"] = bool(dirty)
+    except Exception:
+        out["git_sha"] = None
+    try:
+        import jax
+
+        devs = jax.devices()
+        out["jax_version"] = jax.__version__
+        out["jax_backend"] = jax.default_backend()
+        out["device_kind"] = devs[0].device_kind if devs else None
+        out["device_count"] = len(devs)
+    except Exception as e:  # pragma: no cover - env-specific
+        out["jax_error"] = f"{type(e).__name__}: {e}"
+    return out

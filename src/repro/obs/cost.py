@@ -1,0 +1,66 @@
+"""Static per-plan cost profiles: what a compiled serve program *should*
+cost, captured once from the XLA compiler's own accounting.
+
+A trace tells you where a query's milliseconds went; a cost profile tells
+you what the program underneath was built to do — compiled-program FLOPs
+and bytes (``Compiled.cost_analysis``), live-buffer/device-memory stats
+(``Compiled.memory_analysis``), and the lanes × cap geometry the engine
+chose.  Joining the two answers the questions the paper's evaluation asks
+quantitatively: is a slow batch arithmetic-bound, transfer-bound, or just
+padded to a wasteful geometry?
+
+Profiles are plain JSON-ready dicts.  Every field that depends on a
+backend-specific analysis is best-effort: a backend that cannot produce
+it yields an ``*_error`` string instead of crashing the serve path —
+profiling must never be the thing that takes serving down.
+"""
+
+from __future__ import annotations
+
+__all__ = ["profile_compiled", "profile_jit"]
+
+
+def profile_jit(fn, args, geometry: dict | None = None) -> dict:
+    """AOT-lower ``fn`` on ``args`` and profile the compiled program.
+
+    ``fn`` is a ``jax.jit`` wrapper; this compiles through the jit cache's
+    AOT path (``fn.lower(*args).compile()``), so the profile reflects
+    exactly the program geometry the given arguments select.
+    """
+    return profile_compiled(fn.lower(*args).compile(), geometry)
+
+
+def profile_compiled(compiled, geometry: dict | None = None) -> dict:
+    """Extract the static cost profile of one ``jax`` ``Compiled``."""
+    out: dict = {"geometry": dict(geometry or {})}
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0] if ca else {}
+        ca = dict(ca or {})
+        out["flops"] = float(ca.get("flops", 0.0))
+        out["bytes_accessed"] = float(ca.get("bytes accessed", 0.0))
+        if "transcendentals" in ca:
+            out["transcendentals"] = float(ca["transcendentals"])
+        if out["bytes_accessed"] > 0:
+            out["arithmetic_intensity"] = out["flops"] / out["bytes_accessed"]
+    except Exception as e:  # pragma: no cover - backend-specific
+        out["cost_analysis_error"] = f"{type(e).__name__}: {e}"
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            out["memory"] = {
+                "argument_bytes": int(ma.argument_size_in_bytes),
+                "output_bytes": int(ma.output_size_in_bytes),
+                "temp_bytes": int(ma.temp_size_in_bytes),
+                "alias_bytes": int(ma.alias_size_in_bytes),
+                "generated_code_bytes": int(ma.generated_code_size_in_bytes),
+            }
+            out["memory"]["live_bytes"] = (
+                out["memory"]["argument_bytes"]
+                + out["memory"]["output_bytes"]
+                + out["memory"]["temp_bytes"]
+            )
+    except Exception as e:  # pragma: no cover - backend-specific
+        out["memory_analysis_error"] = f"{type(e).__name__}: {e}"
+    return out

@@ -445,6 +445,62 @@ def test_stats_surface(store_and_truth):
     assert cleared["queries"] == 0 and cleared["batches"] == 0
 
 
+def test_reset_stats_clears_every_counter(store_and_truth):
+    """``reset_stats`` zeroes EVERY counter ``stats()`` reports — flush
+    reasons, shed, cap-growth, admission denials, queue peak, per-tenant
+    counts — while retaining admission STATE (cap_level, plans_charged),
+    which governs future admissions rather than measuring the past."""
+    store, T, ds = store_and_truth
+    E = eng.Engine(store)
+    s_hot, p_hot, _ = _hot_row(T)
+    cfg = ExecConfig(backend="jnp", cap=2)  # tiny cap: growth guaranteed
+
+    async def main():
+        async with ServeBroker(
+            E, cfg, unbounded=False,
+            coalesce=CoalescePolicy(max_batch=8, max_delay_s=0.002),
+            tenant_policy=TenantPolicy(
+                queue_depth=2, max_cap_doublings=8, max_plans=8
+            ),
+        ) as b:
+            # drive every counter: growth (hot row at cap=2), a shed
+            # (queue_depth=2), and ordinary completions
+            futs = [b.submit_nowait("hot", eng.OP_ROW, s_hot, p_hot, 0)
+                    for _ in range(2)]
+            with pytest.raises(QueueFull):
+                b.submit_nowait("hot", eng.OP_ROW, s_hot, p_hot, 0)
+            futs += [b.submit_nowait("calm", eng.OP_CHECK,
+                                     *map(int, ds.ids[i])) for i in range(2)]
+            await asyncio.gather(*futs)
+            st = b.stats()
+            b.reset_stats()
+            return st, b.stats()
+
+    st, cleared = asyncio.run(main())
+    # the run really exercised what reset must clear
+    assert st["cap_growth_events"] >= 1
+    assert st["shed"] == 1
+    assert st["tenants"]["hot"]["cap_growth_events"] >= 1
+
+    zero_keys = (
+        "batches", "lanes", "flush_size", "flush_deadline", "flush_drain",
+        "queue_peak", "shed", "cap_growth_events", "admission_denials",
+        "queries",
+    )
+    for k in zero_keys:
+        assert cleared[k] == 0, (k, cleared[k])
+    assert cleared["coalesce_factor"] == 0.0
+    assert cleared["p50_ms"] is None and cleared["p99_ms"] is None
+    for name, ts in cleared["tenants"].items():
+        for k in ("queries", "failed", "shed", "pending",
+                  "cap_growth_events"):
+            assert ts[k] == 0, (name, k, ts[k])
+        assert ts["p50_ms"] is None and ts["p99_ms"] is None
+    # admission STATE survives: budgets keep governing future growth
+    assert cleared["tenants"]["hot"]["cap_level"] >= 1
+    assert cleared["tenants"]["hot"]["plans_charged"] >= 1
+
+
 def test_submit_after_close_rejected(store_and_truth):
     store, _, ds = store_and_truth
     E = eng.Engine(store)

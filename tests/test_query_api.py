@@ -21,8 +21,8 @@ import pytest
 
 from repro.core import engine as eng, k2triples, optimizer
 from repro.core.query import (
-    BgpQ, CapOverflow, CapPolicy, ExecConfig, JoinQ, Plan, ServeQ,
-    TriplePatternQ, shape_key,
+    AdmissionError, BgpQ, CapOverflow, CapPolicy, ExecConfig, JoinQ, Plan,
+    ServeQ, TriplePatternQ, shape_key,
 )
 from repro.data import rdf
 
@@ -109,7 +109,9 @@ def test_plan_cache_hit_miss(store_and_truth):
     s2, p2, o2 = map(int, ds.ids[1])
 
     plan1 = E.compile(TriplePatternQ(s1, p1, "?o"), cfg)
-    assert E.plan_cache_stats == {"hits": 0, "misses": 1, "size": 1}
+    assert E.plan_cache_stats == {
+        "hits": 0, "misses": 1, "denied": 0, "size": 1
+    }
     # same shape, different constants -> HIT (constants are runtime inputs)
     plan2 = E.compile(TriplePatternQ(s2, p2, "?o"), cfg)
     assert E.plan_cache_stats["hits"] == 1
@@ -127,6 +129,34 @@ def test_plan_cache_hit_miss(store_and_truth):
     assert plan2().tolist() == sorted(
         oo for (ss, pp, oo) in T if ss == s2 and pp == p2
     )
+
+
+def test_plan_cache_stats_admission_denied(store_and_truth):
+    """Denied admission counts as ``denied`` — never as a miss, never as
+    a cache entry — and does not poison later compiles of that shape."""
+    store, T, ds = store_and_truth
+    E = eng.Engine(store)
+    cfg = ExecConfig(backend="jnp", cap=256)
+    q = TriplePatternQ(int(ds.ids[0][0]), int(ds.ids[0][1]), "?o")
+
+    with pytest.raises(AdmissionError):
+        E.compile(q, cfg, admit=lambda key: False)
+    assert E.plan_cache_stats == {
+        "hits": 0, "misses": 0, "denied": 1, "size": 0
+    }
+
+    # the same shape compiles fine afterwards: a real miss, one entry
+    plan = E.compile(q, cfg, admit=lambda key: True)
+    assert E.plan_cache_stats == {
+        "hits": 0, "misses": 1, "denied": 1, "size": 1
+    }
+    # hits never consult the admission hook at all
+    boom = lambda key: (_ for _ in ()).throw(AssertionError("admit on hit"))
+    plan2 = E.compile(q, cfg, admit=boom)
+    assert plan2._executor is plan._executor
+    assert E.plan_cache_stats == {
+        "hits": 1, "misses": 1, "denied": 1, "size": 1
+    }
 
 
 def test_plan_batched_execution(store_and_truth):
