@@ -1,0 +1,191 @@
+"""Query-planner benchmark rows: cost-ordered vs greedy vs worst-case
+join orders on a skewed P=64 corpus.
+
+The corpus is planner-hostile by construction: 64 subjects against a
+few-thousand-object extent, an ``anchor`` predicate (one triple per
+subject, objects on a sparse lattice), a ``bad`` predicate fanning every
+subject out, and a ``good`` predicate whose objects rarely hit the
+anchor lattice.  The trap query joins all three: greedy's flat
+connected-bonus (stand-alone estimate ÷ 10) picks the smaller-looking
+``bad`` branch and rides the fanout, while the DP's per-variable extent
+pricing (``planner.step_estimate``) sees that the ``good`` join prunes
+through the big object extent and runs it first.
+
+Methodology: every DISTINCT join order is timed once (best of
+``repeats`` runs on identical machinery via ``order_override`` — min, so
+a one-off stall or stray recompile can't skew a row) and each strategy
+reports the timing of ITS order — strategies that choose the same order
+report byte-identical numbers, so "cost never slower than greedy" is a
+property of the orders, not of timer noise.  The planner's own search
+cost is reported separately as ``plan_ms``.  ``worst`` is the costliest
+CONNECTED order (cartesian-producing permutations excluded: the executor
+turns those into one bulk enumerate-and-check launch, which this
+substrate batch-vectorizes so well it stops being a join-order
+comparison at all).
+"""
+
+from __future__ import annotations
+
+import itertools
+import time
+
+import numpy as np
+
+from repro.core import algebra, k2triples, planner
+from repro.core.algebra import TriplePattern
+from repro.core.query import CapOverflow
+
+CSV_HEADER = (
+    "query,patterns,cost_ms,greedy_ms,worst_ms,plan_ms,"
+    "cost_order,greedy_order,worst_order"
+)
+
+N_SUBJECTS = 64
+N_PREDS = 64
+P_ANCHOR, P_BAD, P_GOOD = 1, 2, 3
+
+_FAST = dict(n_obj=4000, bad=400, good=600, overlap=48, extra_nnz=16,
+             cap=1024, repeats=3)
+_FULL = dict(n_obj=8000, bad=600, good=900, overlap=64, extra_nnz=32,
+             cap=2048, repeats=4)
+
+
+def build_corpus(*, n_obj, bad, good, overlap, extra_nnz, seed=11, **_):
+    """Skewed ID-triple corpus over ``N_PREDS`` predicates (see module
+    docstring).  Subject extent is tiny (64), object extent is ``n_obj``
+    — the asymmetry the DP prices and greedy cannot."""
+    step = n_obj // N_SUBJECTS  # the anchor's object lattice
+    rng = np.random.default_rng(seed)
+    ids = []
+    ids += [(s, P_ANCHOR, step * s) for s in range(1, N_SUBJECTS + 1)]
+    ids += [
+        (int(rng.integers(1, N_SUBJECTS + 1)), P_BAD,
+         int(rng.integers(1, n_obj + 1)))
+        for _ in range(bad)
+    ]
+    # good: objects rarely on the anchor lattice, plus explicit overlap
+    # rows so the trap query is non-empty
+    ids += [
+        (int(rng.integers(1, N_SUBJECTS + 1)), P_GOOD,
+         int(rng.integers(1, n_obj + 1)))
+        for _ in range(good - overlap)
+    ]
+    ids += [
+        (int(rng.integers(1, N_SUBJECTS + 1)), P_GOOD,
+         step * int(rng.integers(1, N_SUBJECTS + 1)))
+        for _ in range(overlap)
+    ]
+    # background: sparse fill across the remaining predicates
+    ids += [
+        (int(rng.integers(1, N_SUBJECTS + 1)), p,
+         int(rng.integers(1, n_obj + 1)))
+        for p in range(P_GOOD + 1, N_PREDS + 1)
+        for _ in range(extra_nnz)
+    ]
+    ids = np.unique(np.asarray(ids, np.int64), axis=0)
+    return k2triples.from_id_triples(
+        ids, n_so=N_SUBJECTS, n_subjects=N_SUBJECTS, n_objects=n_obj,
+        n_preds=N_PREDS,
+    )
+
+
+QUERIES = [
+    ("star2", [
+        TriplePattern("?s", P_ANCHOR, "?x"),
+        TriplePattern("?s", P_BAD, "?z"),
+    ]),
+    ("objjoin2", [
+        TriplePattern("?s", P_ANCHOR, "?x"),
+        TriplePattern("?w", P_GOOD, "?x"),
+    ]),
+    # the greedy trap: expand through ?s (extent 64, barely prunes) or
+    # join through ?x (extent n_obj, prunes hard) — greedy picks by
+    # stand-alone estimate, the DP by extent-priced steps
+    ("trap3", [
+        TriplePattern("?s", P_ANCHOR, "?x"),
+        TriplePattern("?s", P_BAD, "?z"),
+        TriplePattern("?w", P_GOOD, "?x"),
+    ]),
+    ("star3", [
+        TriplePattern("?s", P_ANCHOR, "?x"),
+        TriplePattern("?s", P_BAD, "?z"),
+        TriplePattern("?z", P_GOOD, "?y"),
+    ]),
+]
+
+
+def _connected(pats, order):
+    bound = set(pats[order[0]].variables)
+    for i in order[1:]:
+        if not (pats[i].variables & bound):
+            return False
+        bound |= pats[i].variables
+    return True
+
+
+def _worst_order(store, pats):
+    perms = [
+        o for o in itertools.permutations(range(len(pats)))
+        if _connected(pats, o)
+    ] or list(itertools.permutations(range(len(pats))))
+    return max(perms, key=lambda o: planner.order_cost(store, pats, o))
+
+
+def _time_order(store, pats, order, *, cap, repeats, backend="jnp"):
+    tree = algebra.bgp(pats)
+    try:
+        planner.execute(store, tree, cap=cap, exec_=backend,
+                        order_override=list(order))  # warm the jit caches
+        times = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            planner.execute(store, tree, cap=cap, exec_=backend,
+                            order_override=list(order))
+            times.append((time.perf_counter() - t0) * 1e3)
+        return float(np.min(times))
+    except CapOverflow:
+        return None  # the order blew past the lane cap: reported, not hidden
+
+
+def run(*, fast: bool = False, backend: str = "jnp") -> list[dict]:
+    kw = _FAST if fast else _FULL
+    store = build_corpus(**kw)
+    rows = []
+    for name, pats in QUERIES:
+        t0 = time.perf_counter()
+        orders = {
+            "cost": tuple(planner.cost_order(store, pats)),
+            "greedy": tuple(planner.greedy_order(store, pats)),
+        }
+        plan_ms = (time.perf_counter() - t0) * 1e3
+        orders["worst"] = _worst_order(store, pats)
+        timed = {
+            o: _time_order(store, pats, o, cap=kw["cap"],
+                           repeats=kw["repeats"], backend=backend)
+            for o in set(orders.values())
+        }
+        rows.append({
+            "query": name,
+            "patterns": len(pats),
+            "plan_ms": plan_ms,
+            **{f"{s}_ms": timed[o] for s, o in orders.items()},
+            **{f"{s}_order": list(o) for s, o in orders.items()},
+            **{f"{s}_cost": planner.order_cost(store, pats, o)
+               for s, o in orders.items()},
+        })
+    return rows
+
+
+def format_row(r: dict) -> str:
+    def ms(v):
+        return f"{v:.2f}" if v is not None else "overflow"
+
+    def order(o):
+        return "".join(map(str, o))
+
+    return (
+        f"{r['query']},{r['patterns']},{ms(r['cost_ms'])},"
+        f"{ms(r['greedy_ms'])},{ms(r['worst_ms'])},{r['plan_ms']:.2f},"
+        f"{order(r['cost_order'])},{order(r['greedy_order'])},"
+        f"{order(r['worst_order'])}"
+    )

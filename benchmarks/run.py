@@ -55,7 +55,7 @@ def main() -> None:
 
     from benchmarks import (
         bench_compression, bench_joins, bench_kernels, bench_patterns,
-        bench_serve,
+        bench_queries, bench_serve,
     )
 
     tracer = metrics = None
@@ -124,6 +124,14 @@ def main() -> None:
     for r in srows:
         print(bench_serve.format_row(r))
     results["serving"] = srows
+
+    print("=" * 72)
+    print("# Query planner: cost-ordered vs greedy vs worst join orders")
+    print(bench_queries.CSV_HEADER)
+    qrows = bench_queries.run(fast=args.fast)
+    for r in qrows:
+        print(bench_queries.format_row(r))
+    results["queries"] = qrows
 
     print("=" * 72)
     print("# kernel microbenches (cpu ref timings + TPU roofline analytics)")

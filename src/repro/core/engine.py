@@ -67,8 +67,10 @@ from repro.core.k2tree import _compact
 from repro.core.k2triples import K2TriplesStore
 from repro.core.k2tree import K2Meta
 from repro.core.predindex import PredIndex, PredIndexMeta
+from repro.core import algebra
 from repro.core.query import (
-    BgpQ, CapOverflow, ExecConfig, JoinQ, Plan, ServeQ, TriplePatternQ,
+    BgpQ, CapOverflow, ExecConfig, JoinQ, Plan, SelectQ, ServeQ,
+    TriplePatternQ,
 )
 from repro.core.sortedset import SENTINEL, IdSet
 from repro.core import sortedset
@@ -859,7 +861,7 @@ class _JoinExec(_ExecBase):
         return _pairs_to_dict_pred(r)
 
 
-_ANON = "?__anon"  # internal prefix for None (anonymous) BGP positions
+_ANON = algebra.ANON  # internal prefix for None (anonymous) BGP positions
 
 
 class _BgpExec(_ExecBase):
@@ -877,15 +879,7 @@ class _BgpExec(_ExecBase):
             raise ValueError("BGP plans take no batch")
         from repro.core import optimizer  # deferred: optimizer imports engine
 
-        pats = [
-            optimizer.TriplePattern(
-                *(
-                    t if not qapi.is_var(t) else (t or f"{_ANON}{i}{k}")
-                    for k, t in zip("spo", (tp.s, tp.p, tp.o))
-                )
-            )
-            for i, tp in enumerate(q.patterns)
-        ]
+        pats = algebra.name_anon(q.patterns)
 
         def fn(cap, _):
             return optimizer.run_bgp(
@@ -893,16 +887,39 @@ class _BgpExec(_ExecBase):
                 serve=self.engine._lanes_runner(self.cfg, cap),
             )
 
-        out = self._grow(fn)
-        if not any(k.startswith(_ANON) for k in out):
-            return out
-        # project the anonymous columns away and re-dedup: the optimizer
-        # dedups over ALL columns, so dropping some can leave duplicate
-        # rows in the named ones
-        keep = sorted(k for k in out if not k.startswith(_ANON))
-        stacked = np.stack([out[k] for k in keep], axis=1)
-        uniq = np.unique(stacked, axis=0)
-        return {k: uniq[:, i] for i, k in enumerate(keep)}
+        # project the anonymous columns away and dedup the named rows —
+        # the shared algebra helper (run_bgp dedups over ALL columns, so
+        # dropping some can leave duplicate rows in the named ones)
+        return algebra.project_named(self._grow(fn))
+
+
+class _SelectExec(_ExecBase):
+    """SPARQL-shaped SELECT: the query lowers to a ``core.algebra``
+    operator tree and ``core.planner`` executes it — cost-ordered (DP)
+    conjunctive blocks with sideways information passing, every check /
+    bounded-scan step through the engine's pooled serve-step programs.
+
+    Returns columnar named bindings like ``_BgpExec``; with ``order_by``
+    the row order is the query's (deterministic total order), otherwise
+    rows come back in dedup order (set semantics either way).
+    """
+
+    def run(self, q: SelectQ, batch):
+        if batch is not None:
+            raise ValueError("SELECT plans take no batch")
+        from repro.core import planner  # deferred: planner imports engine
+
+        tree = algebra.from_select(q)
+
+        def fn(cap, _):
+            return planner.execute(
+                self.engine.store, tree, cap=cap, exec_=self.cfg,
+                serve=self.engine._lanes_runner(self.cfg, cap),
+            )
+
+        # the tree ends in Project (+ Slice): columns are already the
+        # named selection, rows already distinct (and ordered if asked)
+        return dict(self._grow(fn).cols)
 
 
 class _ServeExec(_ExecBase):
@@ -1165,10 +1182,10 @@ class Engine:
                     f"join category {q.category} (fused scan->rebind) is "
                     "not sharded; drop ExecConfig.mesh"
                 )
-            if isinstance(q, BgpQ):
+            if isinstance(q, (BgpQ, SelectQ)):
                 raise ValueError(
-                    "BGP plans are not sharded (enumeration steps run "
-                    "single-device); drop ExecConfig.mesh"
+                    "BGP/SELECT plans are not sharded (enumeration steps "
+                    "run single-device); drop ExecConfig.mesh"
                 )
         if isinstance(q, BgpQ):
             names = {v for tp in q.patterns for v in tp.variables}
@@ -1186,6 +1203,26 @@ class Engine:
                     "projectable columns; name at least one variable "
                     "(or use a TriplePatternQ check shape)"
                 )
+        if isinstance(q, SelectQ):
+            blocks = (q.where,) + q.optional + q.union
+            names = {v for blk in blocks for tp in blk for v in tp.variables}
+            reserved = [v for v in names if v.startswith(algebra.INTERNAL)]
+            if q.select:
+                reserved += [
+                    v for v in q.select if v.startswith(algebra.INTERNAL)
+                ]
+            if reserved:
+                raise ValueError(
+                    f"variable names starting with {algebra.INTERNAL!r} "
+                    f"are reserved for internal columns: {reserved!r}"
+                )
+            if not names:
+                raise ValueError(
+                    "a SELECT whose variables are all anonymous has no "
+                    "projectable columns; name at least one variable"
+                )
+            for ex in q.filter:  # raises TypeError on non-expressions
+                algebra.expr_vars(ex)
         if (
             isinstance(q, ServeQ)
             and q.unbounded
@@ -1206,6 +1243,8 @@ class Engine:
             return _JoinExec(self, cfg)
         if isinstance(q, BgpQ):
             return _BgpExec(self, cfg)
+        if isinstance(q, SelectQ):
+            return _SelectExec(self, cfg)
         if isinstance(q, ServeQ):
             return _ServeExec(self, cfg)
         raise TypeError(f"not a Query: {q!r}")

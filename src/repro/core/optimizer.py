@@ -1,24 +1,21 @@
-"""BGP query optimizer — the paper's §Future-Work item, implemented.
+"""BGP query optimizer — now a thin façade over the algebra/planner layer.
 
 "a query optimizer might allow more complex conjunctive queries to be
-efficiently resolved" (paper, Discussion).  This module plans and executes
-basic graph patterns (conjunctions of ≥2 triple patterns with shared
-variables) on top of the pattern/join primitives:
+efficiently resolved" (paper, Discussion).  This module keeps the
+original conjunctive-query entry points alive; since the SPARQL-shaped
+refactor the actual machinery lives one layer down:
 
-  * **cardinality estimation** from k²-triples statistics — nnz per
-    predicate tree and the dictionary extents — sharpened by the SP/OP
-    predicate index (``core/predindex.py``): a bound subject/object with an
-    unbounded ``?p`` is estimated over its CANDIDATE predicates only
-    (per-entity predicate degree), not the whole-dataset ``nnz.sum()``;
-  * **greedy join ordering**: start from the most selective pattern, then
-    repeatedly pick the connected pattern with the lowest estimated result;
-  * **binding propagation**: intermediate solutions are ID sets; each next
-    pattern is resolved per-binding through the BATCHED engine primitives
-    (``scan_batch_mixed``), so an n-pattern query costs one compiled program
-    launch per plan step, not per binding.  Unbounded-``?p`` steps gather
-    per-row candidate predicates from the index and launch ONE flat
-    (row, candidate) batch — no host loop over all |P| predicates (the
-    index-free fallback loops, as the differential reference).
+  * ``core.algebra``   — operator tree + solution-table algebra (and the
+    shared anon-variable / projection helpers);
+  * ``core.planner``   — cardinality estimation, greedy + DP cost-based
+    join ordering, and sideways-information-passing execution of
+    conjunctive blocks over the engine's pooled serve-IR programs.
+
+:func:`run_bgp` lowers its pattern list to a ``Join``-of-``Scan`` tree
+and executes it through :func:`repro.core.planner.execute`; the
+historical names (``TriplePattern``, ``estimate_cardinality``, ``plan``,
+``_resolve_with_bindings``, …) re-export from their new homes so existing
+imports and tests keep working unchanged.
 
 Variables are strings starting with '?'.  Returns bindings as numpy arrays.
 
@@ -32,311 +29,37 @@ and runs the same core under the cap-growth policy.
 
 from __future__ import annotations
 
-import dataclasses
 import warnings
 from typing import Any
 
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import k2forest
+from repro.core import algebra, planner
+from repro.core.algebra import TriplePattern  # noqa: F401  (re-export)
 from repro.core.k2triples import K2TriplesStore
-from repro.core.query import BgpQ, CapOverflow, ExecConfig, TriplePatternQ
+from repro.core.planner import (  # noqa: F401  (re-exports: historical home)
+    _candidate_preds,
+    _pattern_holds,
+    _ragged_candidates,
+    _ragged_take,
+    _resolve_with_bindings,
+    estimate_cardinality,
+)
+from repro.core.query import BgpQ, ExecConfig, TriplePatternQ
 from repro.core import query as qapi
 
 Term = Any  # int (bound id) | str '?var'
-
-
-@dataclasses.dataclass(frozen=True)
-class TriplePattern:
-    s: Term
-    p: Term
-    o: Term
-
-    @property
-    def variables(self) -> set[str]:
-        return {t for t in (self.s, self.p, self.o) if isinstance(t, str)}
 
 
 def _is_var(t: Term) -> bool:
     return isinstance(t, str)
 
 
-def _candidate_preds(store: K2TriplesStore, s: Term, o: Term) -> np.ndarray | None:
-    """0-based candidate predicates for an unbounded-?p pattern, or None
-    when neither position is a bound in-range id (no pruning possible)."""
-    bi = store.pred_index
-    if bi is None:
-        return None
-    cand = None
-    if not _is_var(s):
-        cand = (
-            bi.host_list(s - 1)
-            if 1 <= s <= store.n_subjects
-            else np.zeros(0, np.int32)
-        )
-    if not _is_var(o):
-        op_list = (
-            bi.host_list(store.n_subjects + o - 1)
-            if 1 <= o <= store.n_objects
-            else np.zeros(0, np.int32)
-        )
-        cand = op_list if cand is None else np.intersect1d(cand, op_list)
-    return cand
-
-
-def estimate_cardinality(store: K2TriplesStore, pat: TriplePattern) -> float:
-    """Expected result size from per-predicate nnz + dictionary extents,
-    predicate-pruned through the SP/OP index when ?p rides a bound s/o."""
-    nnz = np.asarray(store.forest.nnz, np.float64)
-    n_s = max(store.n_subjects, 1)
-    n_o = max(store.n_objects, 1)
-    if _is_var(pat.p):
-        cand = _candidate_preds(store, pat.s, pat.o)
-        total = float(nnz.sum()) if cand is None else float(nnz[cand].sum())
-    else:
-        total = float(nnz[pat.p - 1]) if 1 <= pat.p <= store.n_preds else 0.0
-    sel = 1.0
-    if not _is_var(pat.s):
-        sel /= n_s
-    if not _is_var(pat.o):
-        sel /= n_o
-    return max(total * sel, 1e-3)
-
-
 def plan(store: K2TriplesStore, patterns: list[TriplePattern]) -> list[int]:
-    """Greedy selectivity-ordered, connectivity-respecting plan."""
-    n = len(patterns)
-    cards = [estimate_cardinality(store, p) for p in patterns]
-    order = [int(np.argmin(cards))]
-    bound_vars = set(patterns[order[0]].variables)
-    while len(order) < n:
-        best, best_card = None, float("inf")
-        for i in range(n):
-            if i in order:
-                continue
-            connected = bool(patterns[i].variables & bound_vars)
-            # already-bound variables shrink the estimate sharply
-            card = cards[i] / (10.0 if connected else 1.0)
-            if not connected:
-                card *= 1e6  # cartesian products last
-            if card < best_card:
-                best, best_card = i, card
-        order.append(best)
-        bound_vars |= patterns[best].variables
-    return order
-
-
-def _ragged_take(starts: np.ndarray, deg: np.ndarray):
-    """Expand ragged rows: flat element indices ``starts[i] + j`` for
-    ``j < deg[i]``, plus the owning row of each element."""
-    row_idx = np.repeat(np.arange(deg.shape[0]), deg)
-    within = np.arange(int(deg.sum())) - np.repeat(np.cumsum(deg) - deg, deg)
-    return row_idx, np.repeat(starts, deg) + within
-
-
-def _ragged_candidates(store: K2TriplesStore, keys: np.ndarray, axis: int):
-    """Per-row candidate predicates from the SP (axis 0) / OP (axis 1) index.
-
-    keys: int64[n] 1-based subject/object ids.  Returns ``(row_idx, cand)``
-    — the flat (row, candidate) launch layout: candidate ``cand[j]``
-    (0-based) belongs to binding row ``row_idx[j]``.
-    """
-    bi = store.pred_index
-    if bi is None:  # index-free fallback: every predicate for every row
-        n_rows = keys.shape[0]
-        P = store.n_preds
-        return (
-            np.repeat(np.arange(n_rows), P),
-            np.tile(np.arange(P, dtype=np.int64), n_rows),
-        )
-    offs = bi.host_offsets
-    n_ent = store.n_subjects if axis == 0 else store.n_objects
-    base = 0 if axis == 0 else store.n_subjects
-    rows = base + np.clip(keys - 1, 0, max(n_ent - 1, 0))
-    in_range = (keys >= 1) & (keys <= n_ent)
-    start = np.where(in_range, offs[rows], 0)
-    deg = np.where(in_range, offs[rows + 1] - offs[rows], 0)
-    row_idx, elem = _ragged_take(start, deg)
-    return row_idx, bi.host_preds[elem].astype(np.int64)
-
-
-def _resolve_with_bindings(
-    store, pat, bindings: dict[str, np.ndarray], cap: int,
-    backend=None, serve=None,
-):
-    """Resolve one pattern given current bindings -> columnar solution arrays.
-
-    Chooses the cheapest realization: check / row scan / col scan /
-    pair enumeration, batched over existing binding rows; an unbounded ?p
-    with a bound s/o position resolves over index-pruned candidates in ONE
-    flat launch.
-
-    ``backend`` threads to the traversals (ExecConfig / string / None —
-    see ``k2forest.scan_batch_mixed``).  ``serve`` is an optional serve-IR
-    lane runner ``(ops, s, p, o) -> ServeResult`` (the engine's pooled
-    compiled ``serve_step``); when given, check and bounded-scan steps run
-    through it instead of raw ``k2forest`` launches, so an n-pattern BGP
-    shares the programs (and their jit cache) with every other plan.
-    """
-    meta, f = store.meta, store.forest
-    n_rows = len(next(iter(bindings.values()))) if bindings else 1
-    pvar = _is_var(pat.p)
-
-    def col(term, default):
-        if _is_var(term) and term in bindings:
-            return bindings[term].astype(np.int64), True
-        if not _is_var(term):
-            return np.full(n_rows, term, np.int64), True
-        return np.full(n_rows, default, np.int64), False
-
-    p_free = pvar and pat.p not in bindings
-    s_arr, s_bound = col(pat.s, 1)
-    o_arr, o_bound = col(pat.o, 1)
-    p_arr, _ = col(pat.p, 1)
-    out_cols: dict[str, list] = {v: [] for v in set(bindings) | pat.variables}
-
-    def emit(rows, cols_list):
-        """Keep binding rows ``rows`` and append the new columns.
-
-        ``cols_list`` is positional ``(term, values)`` pairs; a variable
-        repeated across positions of ONE pattern (e.g. ``(S, ?b, ?b)``)
-        contributes several columns and only rows where they agree survive.
-        """
-        new: dict[str, np.ndarray] = {}
-        keep = np.ones(rows.shape[0], np.bool_)
-        for term, vals in cols_list:
-            if not _is_var(term) or term in bindings:
-                continue
-            vals = np.asarray(vals, np.int64)
-            if term in new:
-                keep &= new[term] == vals
-            else:
-                new[term] = vals
-        rows = rows[keep]
-        for v in bindings:
-            out_cols[v].append(bindings[v][rows])
-        for var, vals in new.items():
-            out_cols[var].append(vals[keep])
-
-    def finish():
-        return {
-            v: (np.concatenate(cs) if cs else np.zeros(0, np.int64))
-            for v, cs in out_cols.items()
-        }
-
-    if s_bound and o_bound:  # existence check (maybe per candidate pred)
-        if p_free:
-            # SP(s) candidates (either index half prunes; SP keys the check)
-            row_idx, cand = _ragged_candidates(store, s_arr, 0)
-        else:
-            row_idx, cand = np.arange(n_rows), p_arr - 1
-        # a binding value re-used in predicate position may be out of range
-        ok = (cand >= 0) & (cand < store.n_preds)
-        if serve is not None:
-            from repro.core import engine as _eng
-
-            r = serve(
-                np.where(ok, _eng.OP_CHECK, -1),
-                s_arr[row_idx], np.where(ok, cand + 1, 0), o_arr[row_idx],
-            )
-            hit = np.asarray(r.hit) & ok
-        else:
-            hit = np.asarray(
-                k2forest.check(
-                    meta, f, jnp.asarray(np.where(ok, cand, 0)),
-                    jnp.asarray(s_arr[row_idx] - 1),
-                    jnp.asarray(o_arr[row_idx] - 1),
-                )
-            ) & ok
-        keep = np.nonzero(hit)[0]
-        emit(row_idx[keep], [(pat.p, cand[keep] + 1)])
-        return finish()
-
-    if s_bound or o_bound:  # one free s/o position -> batched scan
-        axis = 0 if s_bound else 1
-        key_arr = s_arr if s_bound else o_arr
-        if p_free:
-            row_idx, cand = _ragged_candidates(store, key_arr, axis)
-        else:
-            row_idx, cand = np.arange(n_rows), p_arr - 1
-        if row_idx.size == 0:  # no candidates anywhere: empty result
-            emit(row_idx, [])
-            return finish()
-        ok = (cand >= 0) & (cand < store.n_preds)
-        if serve is not None:
-            from repro.core import engine as _eng
-
-            op = _eng.OP_ROW if axis == 0 else _eng.OP_COL
-            keys = key_arr[row_idx]
-            r = serve(
-                np.where(ok, op, -1),
-                keys if axis == 0 else np.zeros_like(keys),
-                np.where(ok, cand + 1, 0),
-                keys if axis == 1 else np.zeros_like(keys),
-            )
-            if bool((np.asarray(r.overflow) & ok).any()):
-                raise CapOverflow("BGP scan truncated at cap")
-            ids = np.asarray(r.ids)  # serve ids are already 1-based
-        else:
-            r = k2forest.scan_batch_mixed(
-                meta, f, jnp.asarray(np.where(ok, cand, 0)),
-                jnp.asarray(key_arr[row_idx] - 1),
-                jnp.full(row_idx.shape, axis, jnp.int32), cap, backend,
-            )
-            if bool((np.asarray(r.overflow) & ok).any()):
-                raise CapOverflow("BGP scan truncated at cap")
-            ids = np.asarray(r.ids) + 1
-        lanes, slots = np.nonzero(np.asarray(r.valid) & ok[:, None])
-        rows = row_idx[lanes]
-        emit(rows, [
-            (pat.p, cand[lanes] + 1),
-            (pat.o if s_bound else pat.s, ids[lanes, slots]),
-        ])
-        return finish()
-
-    # neither s nor o realized: enumerate candidate triples by range scan
-    # and cross-product with the binding rows (cartesian steps land here)
-    upreds = (
-        np.arange(1, store.n_preds + 1, dtype=np.int64)
-        if p_free
-        else np.unique(np.clip(p_arr, 1, store.n_preds))
-    )
-    pr = k2forest.range_scan_batch(meta, f, jnp.asarray(upreds - 1), cap, backend)
-    if bool(np.asarray(pr.overflow).any()):
-        raise CapOverflow("BGP pair enumeration truncated at cap")
-    pv = np.asarray(pr.valid)
-    prow, pcol = np.asarray(pr.rows) + 1, np.asarray(pr.cols) + 1
-    counts = pv.sum(axis=1)
-    pair_p = np.repeat(upreds, counts)
-    lanes, slots = np.nonzero(pv)
-    pair_s, pair_o = prow[lanes, slots], pcol[lanes, slots]
-    if p_free:
-        n_pairs = pair_p.shape[0]
-        rows = np.repeat(np.arange(n_rows), n_pairs)
-        sel = np.tile(np.arange(n_pairs), n_rows)
-    else:  # row i may only use pairs of ITS predicate value
-        starts = np.searchsorted(pair_p, p_arr)
-        deg = np.searchsorted(pair_p, p_arr, side="right") - starts
-        rows, sel = _ragged_take(starts, deg)
-    emit(rows, [
-        (pat.p, pair_p[sel]), (pat.s, pair_s[sel]), (pat.o, pair_o[sel]),
-    ])
-    return finish()
-
-
-def _pattern_holds(store: K2TriplesStore, pat: TriplePattern) -> bool:
-    """Ground (variable-free) pattern: does the triple exist?"""
-    if not (1 <= pat.p <= store.n_preds):
-        return False
-    return bool(
-        np.asarray(
-            k2forest.check(
-                store.meta, store.forest, jnp.asarray([pat.p - 1]),
-                jnp.asarray([pat.s - 1]), jnp.asarray([pat.o - 1]),
-            )
-        )[0]
-    )
+    """Greedy selectivity-ordered plan (see ``planner.greedy_order``);
+    estimate ties break by lowest pattern index, so the order is stable
+    across runs.  The cost-based search is ``planner.cost_order``."""
+    return planner.greedy_order(store, patterns)
 
 
 def run_bgp(
@@ -351,41 +74,25 @@ def run_bgp(
     the engine's pooled ``serve_step`` programs, and truncation raises
     :class:`CapOverflow` for the plan's growth policy to handle.
 
+    Since the algebra refactor this is sugar for building a
+    ``Join``-of-``Scan`` tree and running ``planner.execute`` on it; the
+    cost-based (DP) join order replaces the original greedy one.
+
     At least one pattern must carry a variable — for a fully ground (ASK-
     style) query the columnar return type cannot distinguish "holds" from
     "fails"; use a check-shaped ``TriplePatternQ`` / ``k2forest.check``
     instead.
     """
-    # ground patterns are pure existence filters: bindings cannot represent
-    # an "alive but zero-column" state, so evaluate them up front
-    ground = [p for p in patterns if not p.variables]
-    patterns = [p for p in patterns if p.variables]
-    if not patterns:
+    if not any(p.variables for p in patterns):
         raise ValueError(
             "a BGP needs at least one pattern with a variable; use "
             "k2forest.check / a check-shaped TriplePatternQ for fully "
             "ground queries"
         )
-    if any(not _pattern_holds(store, g) for g in ground):
-        return {v: np.zeros(0, np.int64) for p in patterns for v in p.variables}
-    order = plan(store, patterns)
-    first = patterns[order[0]]
-    # seed: resolve the first pattern stand-alone
-    bindings = _resolve_with_bindings(store, first, {}, cap, exec_, serve)
-    bindings = {v: a for v, a in bindings.items() if v in first.variables}
-    for idx in order[1:]:
-        if not bindings or len(next(iter(bindings.values()))) == 0:
-            return {v: np.zeros(0, np.int64) for p in patterns for v in p.variables}
-        bindings = _resolve_with_bindings(
-            store, patterns[idx], bindings, cap, exec_, serve
-        )
-    if bindings:
-        # dedup solution rows
-        keys = sorted(bindings)
-        stacked = np.stack([bindings[k] for k in keys], axis=1)
-        uniq = np.unique(stacked, axis=0)
-        bindings = {k: uniq[:, i] for i, k in enumerate(keys)}
-    return bindings
+    table = planner.execute(
+        store, algebra.bgp(patterns), cap=cap, exec_=exec_, serve=serve
+    )
+    return algebra.project_named(table.cols, keep=table.cols)
 
 
 def execute_bgp(

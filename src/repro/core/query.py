@@ -335,6 +335,69 @@ class BgpQ:
         object.__setattr__(self, "patterns", pats)
 
 
+def _coerce_block(ps):
+    return tuple(
+        p if isinstance(p, TriplePatternQ) else TriplePatternQ(*p) for p in ps
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class SelectQ:
+    """SPARQL-shaped SELECT over one group graph pattern.
+
+    ``where`` is the base conjunction; each entry of ``union`` is an
+    alternative branch (the branches' union is joined with ``where``);
+    each entry of ``optional`` is an OPTIONAL block left-joined in
+    declaration order; ``filter`` holds ``core.algebra`` expressions
+    (``Cmp``/``Bound``/``And``/``Or``/``Not``, SPARQL 3-valued logic);
+    ``select`` projects (``None`` = every named variable), ``order_by``
+    entries are ``"?v"`` ascending / ``"-?v"`` descending, and
+    ``limit``/``offset`` slice the ordered result.  Results are DISTINCT
+    (set semantics, like ``BgpQ``); the ORDER BY ties break over the
+    remaining columns in sorted-name order, so a LIMIT cut is
+    deterministic.
+
+    Lowered by ``core.algebra.from_select`` to an operator tree and
+    executed by ``core.planner`` — cost-ordered conjunctive blocks with
+    sideways information passing over the engine's pooled serve
+    programs.
+    """
+
+    where: tuple[TriplePatternQ, ...] = ()
+    optional: tuple[tuple[TriplePatternQ, ...], ...] = ()
+    union: tuple[tuple[TriplePatternQ, ...], ...] = ()
+    filter: tuple[Any, ...] = ()
+    select: tuple[str, ...] | None = None
+    order_by: tuple[str, ...] = ()
+    limit: int | None = None
+    offset: int = 0
+
+    def __post_init__(self):
+        object.__setattr__(self, "where", _coerce_block(self.where))
+        object.__setattr__(
+            self, "optional", tuple(_coerce_block(b) for b in self.optional)
+        )
+        object.__setattr__(
+            self, "union", tuple(_coerce_block(b) for b in self.union)
+        )
+        object.__setattr__(self, "filter", tuple(self.filter))
+        if self.select is not None:
+            object.__setattr__(self, "select", tuple(self.select))
+        object.__setattr__(self, "order_by", tuple(self.order_by))
+        if not self.where and not self.union:
+            raise ValueError("SelectQ needs a WHERE or UNION block")
+        for spec in self.order_by:
+            v = spec[1:] if spec.startswith("-") else spec
+            if not v.startswith("?"):
+                raise ValueError(
+                    f"order_by entries are '?v' or '-?v', got {spec!r}"
+                )
+        if self.limit is not None and self.limit < 0:
+            raise ValueError("limit must be >= 0")
+        if self.offset < 0:
+            raise ValueError("offset must be >= 0")
+
+
 @dataclasses.dataclass(frozen=True)
 class ServeQ:
     """Raw serve-IR passthrough: ``Plan(batch)`` takes a ``ServeBatch``.
@@ -346,7 +409,7 @@ class ServeQ:
     unbounded: bool = True
 
 
-Query = Any  # TriplePatternQ | JoinQ | BgpQ | ServeQ
+Query = Any  # TriplePatternQ | JoinQ | BgpQ | SelectQ | ServeQ
 
 
 def shape_key(query: Query):
@@ -361,6 +424,10 @@ def shape_key(query: Query):
         # host plan re-runs per call; the compiled programs underneath are
         # shared via the engine's serve-lane pool for ANY BgpQ.
         return ("bgp",)
+    if isinstance(query, SelectQ):
+        # like BgpQ: planning is data-dependent and re-runs per call; the
+        # serve-lane pool underneath is shared across ALL select plans
+        return ("select",)
     if isinstance(query, ServeQ):
         return ("serve", query.unbounded)
     raise TypeError(f"not a Query: {query!r}")

@@ -77,7 +77,7 @@ import numpy as np
 from repro import obs
 from repro.core import engine as eng
 from repro.core.query import (
-    AdmissionError, CapOverflow, CapPolicy, ExecConfig, ServeQ,
+    AdmissionError, CapOverflow, CapPolicy, ExecConfig, SelectQ, ServeQ,
 )
 from repro.obs import LATENCY_MS_BUCKETS, MetricsRegistry
 
@@ -158,6 +158,11 @@ def tail_percentile(samples, q: float) -> float | None:
     if n < need:
         return None
     return float(np.percentile(np.asarray(samples), q))
+
+
+# _Req.op marker for SELECT queries (real serve-IR ops are >= 0; dead
+# lanes are -1): selects never ride the coalesced ServeBatch
+OP_SELECT = -2
 
 
 @dataclasses.dataclass
@@ -257,9 +262,13 @@ class ServeBroker:
             for name in (
                 "batches", "lanes", "flush_size", "flush_deadline",
                 "flush_drain", "shed", "cap_growth_events",
-                "admission_denials",
+                "admission_denials", "selects",
             )
         }
+        # SELECT queries run off-loop (each is a host-planned multi-launch
+        # pipeline, not a lane); the semaphore bounds their thread fanout
+        self._select_sem = asyncio.Semaphore(max(2, coalesce.max_inflight))
+        self._select_tasks: set[asyncio.Task] = set()
         self._queue_peak = 0
         self._seq = 0  # per-query trace ids
         self._bid = 0  # batch ids
@@ -289,6 +298,8 @@ class ServeBroker:
         self._draining = True
         self._wake.set()
         await self._task
+        if self._select_tasks:  # selects accepted before the drain finish
+            await asyncio.gather(*self._select_tasks, return_exceptions=True)
         self._running = False
 
     # -- submission -----------------------------------------------------
@@ -325,13 +336,87 @@ class ServeBroker:
                      o: int = 0):
         return await self.submit_nowait(tenant, op, s, p, o)
 
+    def submit_select_nowait(self, tenant: str, q: SelectQ) -> asyncio.Future:
+        """Enqueue one SPARQL-shaped :class:`~repro.core.query.SelectQ`;
+        the future resolves to its columnar named bindings.
+
+        Selects share the tenant's bounded queue (``queue_depth``) and its
+        latency/completion stats with the lane path, but never ride the
+        coalesced ``ServeBatch``: each executes off the event loop through
+        ``Engine.compile`` with cap growth budgeted by the tenant's
+        ``max_cap_doublings`` and plan-cache admission charged through the
+        same ``max_plans`` quota (the compiled ``("select",)`` executor is
+        shared across tenants — misses are charged to whoever compiles a
+        cap level first, hits are free, exactly like retry plans).
+        """
+        if not self._running or self._draining:
+            raise RuntimeError("broker is not accepting requests")
+        st = self._tenant(tenant)
+        if st.pending >= self.tenant_policy.queue_depth:
+            st.shed += 1
+            self._c["shed"].inc()
+            raise QueueFull(
+                f"tenant {tenant!r} at queue_depth="
+                f"{self.tenant_policy.queue_depth}; shed-newest"
+            )
+        st.pending += 1
+        fut = asyncio.get_running_loop().create_future()
+        r = _Req(tenant, OP_SELECT, 0, 0, 0, time.perf_counter(), fut,
+                 seq=self._seq)
+        self._seq += 1
+        self._c["selects"].inc()
+        task = asyncio.get_running_loop().create_task(self._run_select(r, q))
+        self._select_tasks.add(task)
+        task.add_done_callback(self._select_tasks.discard)
+        return fut
+
+    async def submit_select(self, tenant: str, q: SelectQ):
+        return await self.submit_select_nowait(tenant, q)
+
+    async def _run_select(self, r: _Req, q: SelectQ):
+        async with self._select_sem:
+            try:
+                value = await asyncio.to_thread(self._select_call, r, q)
+            except (CapOverflow, AdmissionError) as e:
+                st = self._tenants[r.tenant]
+                if isinstance(e, AdmissionError):
+                    st.admission_denials += 1
+                    self._c["admission_denials"].inc()
+                self._fail(r, e)
+            except Exception as e:  # lowering/validation errors -> caller
+                self._fail(r, e)
+            else:
+                self._resolve(r, value)
+
+    def _select_call(self, r: _Req, q: SelectQ):
+        """Blocking (off-loop) SELECT execution under the tenant's growth
+        budget; cap-doubling recompiles pass the tenant's admission
+        closure like any retry plan."""
+        st = self._tenants[r.tenant]
+        # mesh=None: SELECT planner blocks run single-device (the engine
+        # rejects sharded BGP/SELECT loudly); the broker's base serve plan
+        # stays sharded regardless
+        cfg = self.config.replace(
+            mesh=None,
+            cap_policy=CapPolicy(
+                grow=True,
+                max_doublings=self.tenant_policy.max_cap_doublings,
+            ),
+        )
+        with obs.span("broker.select", cat="broker", tenant=r.tenant,
+                      seq=r.seq):
+            plan = self.engine.compile(q, cfg, admit=self._admit(st))
+            return plan()
+
     async def stream(self, tenant: str, queries):
         """Submit a tenant's query stream, yielding results in submission
-        order.  ``queries`` is an iterable of ``(op, s, p, o)``.  The
-        whole stream is admitted through the same bounded queue — a
+        order.  ``queries`` is an iterable of ``(op, s, p, o)`` lane
+        tuples and/or :class:`~repro.core.query.SelectQ` queries (mixed
+        freely — the serve driver's full-shape traffic).  The whole
+        stream is admitted through the same bounded queue — a
         :class:`QueueFull` shed propagates to the caller mid-stream."""
         window: collections.deque[asyncio.Future] = collections.deque()
-        for (op, s, p, o) in queries:
+        for item in queries:
             while window and window[0].done():
                 yield await window.popleft()
             # stay inside the tenant's queue bound: wait for the oldest
@@ -341,7 +426,10 @@ class ServeBroker:
                 and self._tenant(tenant).pending >= self.tenant_policy.queue_depth
             ):
                 yield await window.popleft()
-            window.append(self.submit_nowait(tenant, op, s, p, o))
+            if isinstance(item, SelectQ):
+                window.append(self.submit_select_nowait(tenant, item))
+            else:
+                window.append(self.submit_nowait(tenant, *item))
         while window:
             yield await window.popleft()
 
@@ -632,6 +720,7 @@ class ServeBroker:
             "flush_drain": self._c["flush_drain"].value,
             "queue_depth": len(self._queue),
             "queue_peak": self._queue_peak,
+            "selects": self._c["selects"].value,
             "shed": self._c["shed"].value,
             "cap_growth_events": self._c["cap_growth_events"].value,
             "admission_denials": self._c["admission_denials"].value,

@@ -54,14 +54,19 @@ def zipf_weights(n_tenants: int, a: float) -> np.ndarray:
 
 def make_trace(
     ds, n_queries: int, n_tenants: int, *, zipf_a: float = 1.1,
-    unbounded: bool = True, seed: int = 0,
-) -> list[tuple[str, int, int, int, int]]:
-    """A skewed multi-tenant trace: ``(tenant, op, s, p, o)`` rows.
+    unbounded: bool = True, select_frac: float = 0.0, seed: int = 0,
+) -> list[tuple]:
+    """A skewed multi-tenant trace: ``(tenant, op, s, p, o)`` lane rows,
+    plus ``(tenant, SelectQ)`` rows for a ``select_frac`` fraction of the
+    trace (SPARQL-shaped queries anchored on real subjects: a bounded
+    WHERE scan with an OPTIONAL second predicate, ordered and limited).
 
     Tenants are Zipf(a)-weighted; ops follow ``_OP_WEIGHTS`` (bounded-only
     when ``unbounded=False``); ids come from real triples so every query
     has a non-empty answer shape to decode.
     """
+    from repro.core.query import SelectQ, TriplePatternQ
+
     rng = np.random.default_rng(seed)
     ops_pool = [op for op in _OP_WEIGHTS if unbounded or op < 3]
     p_ops = np.array([_OP_WEIGHTS[op] for op in ops_pool])
@@ -69,21 +74,36 @@ def make_trace(
     ops = rng.choice(ops_pool, size=n_queries, p=p_ops)
     tenants = rng.choice(n_tenants, size=n_queries, p=zipf_weights(n_tenants, zipf_a))
     rows = ds.ids[rng.integers(0, ds.n_triples, n_queries)]
-    trace = []
+    is_select = rng.random(n_queries) < select_frac
+    trace: list[tuple] = []
     for i in range(n_queries):
         s, p, o = map(int, rows[i])
+        tenant = f"tenant-{tenants[i]}"
+        if is_select[i]:
+            p2 = int(rng.integers(1, ds.n_preds + 1))
+            trace.append((tenant, SelectQ(
+                where=(TriplePatternQ(s, p, "?o"),),
+                optional=((TriplePatternQ(s, p2, "?x"),),),
+                order_by=("?o",),
+                limit=16,
+            )))
+            continue
         if ops[i] >= 3:
             p = 0  # unbounded-?P ops leave the predicate free
-        trace.append((f"tenant-{tenants[i]}", int(ops[i]), s, p, o))
+        trace.append((tenant, int(ops[i]), s, p, o))
     return trace
 
 
 async def _replay(broker: ServeBroker, trace) -> int:
     """Replay the trace as one async stream per tenant (per-tenant FIFO),
-    counting decoded results."""
+    counting decoded results.  Rows are ``(tenant, op, s, p, o)`` lanes
+    or ``(tenant, SelectQ)`` full-shape queries — ``broker.stream``
+    accepts both item shapes."""
     per_tenant: dict[str, list] = {}
-    for tenant, op, s, p, o in trace:
-        per_tenant.setdefault(tenant, []).append((op, s, p, o))
+    for tenant, *rest in trace:
+        per_tenant.setdefault(tenant, []).append(
+            rest[0] if len(rest) == 1 else tuple(rest)
+        )
 
     async def one(tenant, queries):
         n = 0
@@ -110,6 +130,7 @@ def run_bench(
     backend: str | None = None,
     sharded: bool = False,
     unbounded: bool = True,
+    select_frac: float = 0.0,
     warmup: int = 64,
     seed: int = 0,
     quiet: bool = False,
@@ -176,7 +197,8 @@ def run_bench(
 
     engine = eng.Engine(store)
     trace = make_trace(
-        ds, n_queries, n_tenants, zipf_a=zipf_a, unbounded=unbounded, seed=seed + 1
+        ds, n_queries, n_tenants, zipf_a=zipf_a, unbounded=unbounded,
+        select_frac=select_frac, seed=seed + 1,
     )
     # bound per-tenant windows so ~two coalesced batches stay outstanding:
     # the pipeline keeps both buffers fed while latency still means
@@ -234,6 +256,8 @@ def run_bench(
         "zipf_a": zipf_a,
         "unbounded": unbounded,
         "queries": n_queries,
+        "select_frac": select_frac,
+        "selects": stats["selects"],
         "cap": cap,
         "max_batch": max_batch,
         "deadline_ms": deadline_ms,
@@ -318,6 +342,11 @@ def main(argv=None) -> None:
         "--bounded-only", action="store_true",
         help="trace without unbounded-?P ops (compiles the u_* block out)",
     )
+    ap.add_argument(
+        "--select-frac", type=float, default=0.0,
+        help="fraction of the trace served as SPARQL-shaped SelectQ "
+             "queries (OPTIONAL + ORDER/LIMIT) instead of raw lanes",
+    )
     ap.add_argument("--fast", action="store_true", help="tiny smoke-test trace")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument(
@@ -348,7 +377,8 @@ def main(argv=None) -> None:
         n_queries=args.queries, zipf_a=args.zipf, cap=args.cap,
         max_batch=args.batch, deadline_ms=args.deadline_ms,
         backend=args.backend, sharded=args.sharded,
-        unbounded=not args.bounded_only, seed=args.seed,
+        unbounded=not args.bounded_only, select_frac=args.select_frac,
+        seed=args.seed,
     )
     if args.fast:
         kw.update(

@@ -1,0 +1,286 @@
+"""The cost-based planner: deterministic tie-breaks, DP-vs-greedy
+divergence on a crafted greedy trap, SelectQ end-to-end through
+``Engine.compile``, and planner observability (``planner.order`` span +
+SIP-pruning counter, with the disabled-path tripwire)."""
+
+import numpy as np
+import pytest
+
+import repro.obs as obs
+from repro.core import algebra, engine as eng, k2triples, optimizer, planner
+from repro.core.algebra import Cmp, TriplePattern
+from repro.core.query import ExecConfig, ObsConfig, SelectQ, TriplePatternQ
+from repro.data import rdf
+from repro.obs.metrics import Counter, Gauge, Histogram
+from repro.obs.trace import Tracer
+
+
+@pytest.fixture(autouse=True)
+def _obs_off_after():
+    yield
+    obs.disable()
+
+
+def _store_from_triples(ids, *, n_subjects, n_objects, n_preds):
+    ids = np.asarray(ids, np.int64)
+    return k2triples.from_id_triples(
+        ids, n_so=min(n_subjects, n_objects), n_subjects=n_subjects,
+        n_objects=n_objects, n_preds=n_preds,
+    )
+
+
+@pytest.fixture(scope="module")
+def rdf_store():
+    ds = rdf.generate(220, n_subjects=16, n_preds=5, n_objects=18, seed=17)
+    store = k2triples.from_id_triples(
+        ds.ids, n_so=ds.n_so, n_subjects=ds.n_subjects,
+        n_objects=ds.n_objects, n_preds=ds.n_preds,
+    )
+    return store, list(map(tuple, ds.ids.tolist())), ds
+
+
+# ---------------------------------------------------------------------------
+# deterministic planning
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def symmetric_store():
+    """n_subjects == n_objects and one predicate: a chain of identical
+    patterns prices the same in every direction — a pure tie."""
+    ids = [(s, 1, (s % 16) + 1) for s in range(1, 17)]
+    return _store_from_triples(ids, n_subjects=16, n_objects=16, n_preds=1)
+
+
+def test_tie_breaks_by_lowest_pattern_index(symmetric_store):
+    chain = [
+        TriplePattern("?a", 1, "?b"),
+        TriplePattern("?b", 1, "?c"),
+        TriplePattern("?c", 1, "?d"),
+    ]
+    ests = [planner.estimate_cardinality(symmetric_store, p) for p in chain]
+    assert ests[0] == ests[1] == ests[2]  # genuinely tied
+    # [0,1,2] and [2,1,0] cost the same; index breaks the tie
+    fwd = planner.order_cost(symmetric_store, chain, [0, 1, 2])
+    rev = planner.order_cost(symmetric_store, chain, [2, 1, 0])
+    assert fwd == pytest.approx(rev)
+    assert planner.greedy_order(symmetric_store, chain) == [0, 1, 2]
+    assert planner.cost_order(symmetric_store, chain) == [0, 1, 2]
+    # the optimizer facade delegates, and repeated calls are stable
+    assert optimizer.plan(symmetric_store, chain) == [0, 1, 2]
+    assert all(
+        planner.cost_order(symmetric_store, chain) == [0, 1, 2]
+        for _ in range(3)
+    )
+
+
+@pytest.fixture(scope="module")
+def trap_store():
+    """A greedy trap: the anchor binds a tiny-extent variable (?s, 4
+    subjects) and a huge-extent one (?x, 1000 objects).  Greedy's flat
+    connected-bonus (÷10) prefers the smaller stand-alone pattern even
+    though its shared variable barely prunes; the DP prices the join
+    through the per-variable extents and flips the order."""
+    ids = []
+    ids += [(s, 1, 10 * s) for s in range(1, 5)]                # nnz(p1)=4
+    ids += [((i % 4) + 1, 2, 100 + i) for i in range(30)]       # nnz(p2)=30
+    ids += [(1, 3, 10), (2, 3, 20)]                             # join the ?x chain
+    ids += [((i % 4) + 1, 3, 500 + i) for i in range(48)]       # nnz(p3)=50
+    return _store_from_triples(ids, n_subjects=4, n_objects=1000, n_preds=3)
+
+
+def test_dp_beats_greedy_on_trap(trap_store):
+    pats = [
+        TriplePattern("?s", 1, "?x"),   # anchor: est 4
+        TriplePattern("?s", 2, "?z"),   # est 30, shares ?s (extent 4)
+        TriplePattern("?w", 3, "?x"),   # est 50, shares ?x (extent 1000)
+    ]
+    g = planner.greedy_order(trap_store, pats)
+    c = planner.cost_order(trap_store, pats)
+    assert g == [0, 1, 2]  # greedy: smaller stand-alone estimate first
+    assert c == [0, 2, 1]  # DP: the ?x join prunes ~250x harder
+    assert (
+        planner.order_cost(trap_store, pats, c)
+        < planner.order_cost(trap_store, pats, g)
+    )
+    # identical answers either way (same machinery, different order)
+    a = planner.execute(trap_store, algebra.bgp(pats), cap=512, exec_="jnp")
+    b = planner.execute(
+        trap_store, algebra.bgp(pats), cap=512, exec_="jnp",
+        order_override=g,
+    )
+    key = sorted(a.cols)
+    rows = lambda t: set(map(tuple, np.stack(
+        [t.cols[k] for k in key], axis=1).tolist()))
+    assert rows(a) == rows(b) and a.n > 0
+
+
+def test_cost_order_never_worse_than_greedy(rdf_store):
+    """Model-level dominance: on random pattern sets the DP's modelled
+    cost is <= greedy's (it searches a superset of greedy's orders)."""
+    store, T, ds = rdf_store
+    rng = np.random.default_rng(5)
+    pool = ["?a", "?b", "?c"]
+    for _ in range(20):
+        pats = []
+        for _ in range(int(rng.integers(2, 5))):
+            terms = []
+            for extent in (ds.n_subjects, ds.n_preds, ds.n_objects):
+                r = rng.random()
+                terms.append(
+                    pool[rng.integers(0, 3)] if r < 0.5
+                    else int(rng.integers(1, extent + 1))
+                )
+            pats.append(TriplePattern(*terms))
+        if not any(p.variables for p in pats):
+            continue
+        g = planner.order_cost(store, pats, planner.greedy_order(store, pats))
+        c = planner.order_cost(store, pats, planner.cost_order(store, pats))
+        assert c <= g * (1 + 1e-9), (pats, c, g)
+
+
+def test_dp_limit_falls_back_to_greedy(rdf_store):
+    store, _, _ = rdf_store
+    pats = [TriplePattern(f"?v{i}", 1, f"?v{i + 1}") for i in range(9)]
+    assert len(pats) > planner.DP_LIMIT
+    assert planner.cost_order(store, pats) == planner.greedy_order(store, pats)
+
+
+# ---------------------------------------------------------------------------
+# SelectQ end-to-end through Engine.compile
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["pallas", "jnp"])
+def test_selectq_roundtrip(rdf_store, backend):
+    store, T, ds = rdf_store
+    E = eng.Engine(store)
+    cfg = ExecConfig(backend=backend, cap=4096)
+
+    q = SelectQ(
+        where=(TriplePatternQ("?a", 1, "?b"),),
+        optional=((TriplePatternQ("?b", 2, "?c"),),),
+        filter=(Cmp(">", "?a", 3),),
+        order_by=("-?b",),
+        limit=7,
+    )
+    got = E.compile(q, cfg)()
+    # oracle: compat left-join + 3VL filter + total-order slice
+    left = [(s, o) for s, p, o in T if p == 1 and s > 3]
+    rows = []
+    for a, b in left:
+        ms = [(a, b, o2) for s2, p2, o2 in T if p2 == 2 and s2 == b]
+        rows.extend(ms if ms else [(a, b, 0)])
+    uniq = sorted(set(rows), key=lambda r: (-r[1], r[0], r[2]))[:7]
+    got_rows = list(zip(
+        got["?a"].tolist(), got["?b"].tolist(), got["?c"].tolist(),
+    ))
+    assert got_rows == uniq
+
+    # UNION with projection
+    q2 = SelectQ(
+        union=(
+            (TriplePatternQ("?x", 1, "?y"),),
+            (TriplePatternQ("?x", 2, "?y"),),
+        ),
+        select=("?x", "?y"),
+    )
+    got2 = E.compile(q2, cfg)()
+    exp2 = {(s, o) for s, p, o in T if p in (1, 2)}
+    assert set(zip(got2["?x"].tolist(), got2["?y"].tolist())) == exp2
+
+
+def test_selectq_validation(rdf_store):
+    store, _, _ = rdf_store
+    E = eng.Engine(store)
+    cfg = ExecConfig(backend="jnp", cap=256)
+    with pytest.raises(ValueError):  # needs WHERE or UNION
+        SelectQ()
+    with pytest.raises(ValueError):  # order_by entries are '?v' / '-?v'
+        SelectQ(where=(TriplePatternQ("?a", 1, "?b"),), order_by=("b",))
+    with pytest.raises(ValueError):
+        SelectQ(where=(TriplePatternQ("?a", 1, "?b"),), limit=-1)
+    with pytest.raises(ValueError):
+        SelectQ(where=(TriplePatternQ("?a", 1, "?b"),), offset=-1)
+    with pytest.raises(ValueError, match="reserved"):
+        E.compile(SelectQ(where=(TriplePatternQ("?__x", 1, "?b"),)), cfg)
+    with pytest.raises(ValueError, match="name at least one"):
+        E.compile(SelectQ(where=(TriplePatternQ(1, 1, 2),)), cfg)
+    with pytest.raises(TypeError):  # filters must be algebra expressions
+        E.compile(
+            SelectQ(
+                where=(TriplePatternQ("?a", 1, "?b"),), filter=("?a > 3",)
+            ),
+            cfg,
+        )
+    plan = E.compile(SelectQ(where=(TriplePatternQ("?a", 1, "?b"),)), cfg)
+    with pytest.raises(ValueError, match="no batch"):
+        plan(np.zeros(4))
+
+
+def test_selectq_plan_cache_key(rdf_store):
+    """All SELECTs share one shape key: recompiling a different SELECT
+    under the same config is a plan-cache hit, not a recompile."""
+    store, _, _ = rdf_store
+    E = eng.Engine(store)
+    cfg = ExecConfig(backend="jnp", cap=256)
+    E.compile(SelectQ(where=(TriplePatternQ("?a", 1, "?b"),)), cfg)
+    misses0 = E.plan_cache_stats["misses"]
+    E.compile(SelectQ(where=(TriplePatternQ("?x", 2, "?y"),), limit=3), cfg)
+    assert E.plan_cache_stats["misses"] == misses0
+    assert E.plan_cache_stats["hits"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# observability: span + counter when on, silence when off
+# ---------------------------------------------------------------------------
+
+
+def test_planner_order_span_and_sip_counter(rdf_store):
+    store, T, ds = rdf_store
+    assert store.pred_index is not None
+    tracer, metrics = obs.enable(ObsConfig())
+    # bound-s unbounded-?p step: the SP index prunes candidate lanes
+    tree = algebra.bgp([
+        TriplePattern("?a", 1, "?b"),
+        TriplePattern("?b", "?p", "?c"),
+    ])
+    t = planner.execute(store, tree, cap=4096, exec_="jnp")
+    assert t.n > 0
+    spans = [e for e in tracer.events() if e["name"] == "planner.order"]
+    assert spans, "planner must emit a planner.order span when tracing"
+    args = spans[-1]["args"]
+    assert args["patterns"] == 2 and len(args["order"]) == 2
+    assert len(args["estimated"]) == len(args["actual"]) == 2
+    assert args["actual"][-1] == t.n  # last step cardinality = result rows
+    snap = metrics.snapshot()
+    assert snap["planner.sip_pruned_lanes"]["value"] > 0
+
+
+def test_planner_obs_disabled_is_free(monkeypatch, rdf_store):
+    """With observability off, planner execution touches no obs surface
+    — every recording call armed to raise, including ``Counter.inc``
+    (the planner's counter is obs-layer metrics, not broker
+    bookkeeping)."""
+    store, _, _ = rdf_store
+    tree = algebra.bgp([
+        TriplePattern("?a", 1, "?b"),
+        TriplePattern("?b", "?p", "?c"),
+    ])
+    planner.execute(store, tree, cap=4096, exec_="jnp")  # prime compiles
+
+    def boom(name):
+        def _(*a, **k):
+            raise AssertionError(f"obs call {name} on the DISABLED path")
+        return _
+
+    for m in ("__init__", "begin", "end", "span", "add", "add_async",
+              "instant", "_record"):
+        monkeypatch.setattr(Tracer, m, boom(f"Tracer.{m}"))
+    monkeypatch.setattr(Histogram, "observe", boom("Histogram.observe"))
+    monkeypatch.setattr(Gauge, "set", boom("Gauge.set"))
+    monkeypatch.setattr(Counter, "inc", boom("Counter.inc"))
+
+    assert not obs.enabled()
+    t = planner.execute(store, tree, cap=4096, exec_="jnp")
+    assert t.n > 0
