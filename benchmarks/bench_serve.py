@@ -13,7 +13,8 @@ from __future__ import annotations
 from repro.launch import serve
 
 CSV_HEADER = (
-    "mode,backend,devices,queries,qps,p50_ms,p99_ms,coalesce,shed,cap_growths"
+    "mode,backend,devices,donate,queries,qps,p50_ms,p99_ms,coalesce,shed,"
+    "cap_growths"
 )
 
 _FAST = dict(
@@ -27,11 +28,13 @@ _FULL = dict(
 
 
 def run(*, fast: bool = False, backend: str | None = None) -> list[dict]:
-    """One row single-device, plus one sharded row when devices allow."""
+    """Single-device rows with buffer donation on AND off (the before/after
+    pair for the per-batch donation optimisation), plus one sharded row
+    when devices allow."""
     import jax
 
     kw = dict(_FAST if fast else _FULL, backend=backend, quiet=True)
-    rows = [serve.run_bench(**kw)]
+    rows = [serve.run_bench(**kw), serve.run_bench(**kw, donate=False)]
     if len(jax.devices()) > 1:
         rows.append(serve.run_bench(**kw, sharded=True))
     else:
@@ -45,7 +48,8 @@ def format_row(row: dict) -> str:
         return f"{v:.2f}" if v is not None else "n/a"
 
     return (
-        f"{row['mode']},{row['backend']},{row['devices']},{row['queries']},"
+        f"{row['mode']},{row['backend']},{row['devices']},"
+        f"{int(row.get('donate', False))},{row['queries']},"
         f"{row['qps']:.0f},{pct(row['p50_ms'])},{pct(row['p99_ms'])},"
         f"{row['coalesce_factor']:.1f},{row['shed']},{row['cap_growth_events']}"
     )

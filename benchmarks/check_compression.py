@@ -1,0 +1,89 @@
+"""CI compression-regression gate over a fresh ``benchmarks.run`` JSON.
+
+Two checks per compression row, against the baseline ``BENCH_results.json``
+committed in the repo (copied aside BEFORE the bench refreshes it):
+
+  1. **measured-vs-analytic band** — the device SP/OP index must stay
+     real: ``spop_bits_per_triple <= RATIO * spop_dac_bits_per_triple``.
+     A layout regression (padding creep, a fallback silently re-becoming
+     the default) shows up here even though every functional test passes.
+  2. **end-to-end no-regress** — ``e2e_bits_per_triple`` (k² + index +
+     dictionary) must not exceed the committed baseline row by more than
+     ``SLACK`` (small float/shape jitter allowance).  Datasets missing
+     from the baseline (first run after adding a corpus) are skipped with
+     a note.
+
+Usage:  python -m benchmarks.check_compression NEW.json BASELINE.json
+Exit status 1 on any violation; prints one verdict line per row.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+RATIO = 1.25   # measured DAC arena within 25% of the analytic figure
+SLACK = 1.02   # <=2% end-to-end drift vs the committed baseline
+
+
+def check(new: dict, baseline: dict) -> list[str]:
+    """-> list of violation messages (empty == gate passes)."""
+    problems: list[str] = []
+    base_rows = {
+        r["dataset"]: r for r in baseline.get("compression", [])
+    }
+    rows = new.get("compression", [])
+    if not rows:
+        return ["no compression rows in the new results JSON"]
+    for r in rows:
+        name = r["dataset"]
+        spop = float(r["spop_bits_per_triple"])
+        dac = float(r["spop_dac_bits_per_triple"])
+        if dac > 0 and spop > RATIO * dac:
+            problems.append(
+                f"{name}: measured spop {spop:.2f} > {RATIO}x analytic "
+                f"DAC {dac:.2f} ({RATIO * dac:.2f}) — device layout "
+                "regressed"
+            )
+        else:
+            print(
+                f"ok {name}: spop {spop:.2f} <= {RATIO}x dac {dac:.2f}"
+            )
+        e2e = r.get("e2e_bits_per_triple")
+        base = base_rows.get(name)
+        if e2e is None:
+            problems.append(f"{name}: new results lack e2e_bits_per_triple")
+        elif base is None or "e2e_bits_per_triple" not in base:
+            print(f"note {name}: no baseline e2e row; skipping no-regress")
+        else:
+            b = float(base["e2e_bits_per_triple"])
+            if float(e2e) > SLACK * b:
+                problems.append(
+                    f"{name}: e2e {float(e2e):.2f} bits/triple regressed "
+                    f"vs baseline {b:.2f} (allowed {SLACK * b:.2f})"
+                )
+            else:
+                print(
+                    f"ok {name}: e2e {float(e2e):.2f} <= {SLACK}x "
+                    f"baseline {b:.2f}"
+                )
+    return problems
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    if len(argv) != 2:
+        print(__doc__)
+        return 2
+    with open(argv[0]) as fh:
+        new = json.load(fh)
+    with open(argv[1]) as fh:
+        baseline = json.load(fh)
+    problems = check(new, baseline)
+    for p in problems:
+        print(f"FAIL {p}", file=sys.stderr)
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

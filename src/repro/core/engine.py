@@ -308,6 +308,7 @@ def _serve_local(
 def make_serve_step(
     meta: K2Meta, cap: int, *, backend: str | None = None,
     pmeta: PredIndexMeta | None = None, u_width: int | None = None,
+    donate: bool = False,
 ):
     """Single-device jit'd serve program.
 
@@ -319,17 +320,23 @@ def make_serve_step(
     ops compiled out).  Call as ``serve_step(forest, batch[, index])`` —
     passing ``index=None`` with ``u_width >= n_preds`` runs the all-preds
     fallback sweep.
+
+    ``donate=True`` donates the per-batch ``ServeBatch`` buffers (argument
+    1) to XLA: the program may alias their device memory for outputs, so a
+    donated device batch is consumed by the call (``x.is_deleted()``
+    afterwards).  Numpy batches are unaffected (they are copied in under
+    jit anyway); callers that re-use a device batch must copy first — the
+    engine's ``_ServeExec`` does this defensively.
     """
     if u_width is None:
         u_width = pmeta.max_degree if pmeta is not None else 0
 
-    @jax.jit
     def serve_step(f: K2Forest, q: ServeBatch, index=None) -> ServeResult:
         return _serve_local(
             meta, f, q, cap, backend, index=index, pmeta=pmeta, u_width=u_width
         )
 
-    return serve_step
+    return jax.jit(serve_step, donate_argnums=(1,) if donate else ())
 
 
 # ---------------------------------------------------------------------------
@@ -500,7 +507,7 @@ def make_sharded_serve_step(
         )
 
     if u_width > 0:
-        ispec = PredIndex(offsets=P(), words=P())  # replicated
+        ispec = PredIndex(*(P() for _ in PredIndex._fields))  # replicated
         fn = shard_map(
             _local, mesh=mesh, in_specs=(fspec, qspec, ispec),
             out_specs=out_spec,
@@ -933,6 +940,27 @@ class _ServeExec(_ExecBase):
             batch = ServeBatch(*(jnp.asarray(a, jnp.int32) for a in batch))
         return batch
 
+    def _donates(self) -> bool:
+        """Whether the dispatched program donates its batch argument
+        (mirrors ``Engine._program``'s donate condition)."""
+        return self.cfg.donate_batch and self.cfg.mesh is None
+
+    def _donation_copy(self, qb: ServeBatch) -> ServeBatch:
+        """Fresh batch buffers for one donating dispatch.
+
+        The donating program consumes (aliases) its batch argument, so a
+        caller-held DEVICE batch is copied per call — this also makes cap
+        growth safe (the retry dispatch gets its own copy).  Numpy inputs
+        are copied in by jit anyway and skip the defensive copy.
+        """
+        if not self._donates():
+            return qb
+        return ServeBatch(*(
+            jnp.array(a, jnp.int32, copy=True)
+            if isinstance(a, jax.Array) else jnp.asarray(a, jnp.int32)
+            for a in qb
+        ))
+
     def run(self, q: ServeQ, batch):
         batch = self._coerce(batch)
 
@@ -981,10 +1009,10 @@ class _ServeExec(_ExecBase):
             fn = eng._program(cfg, cap, max(eng.store.n_preds, 1), False)
             return fn, (f, qb, None)
         fn = eng._program(cfg, cap, eng._u_width(cfg), True)
-        return fn, (f, qb, bi.device)
+        return fn, (f, qb, bi.select(cfg.pred_index_layout)[0])
 
     def _call(self, qb, cap, unbounded):
-        fn, args = self._args(qb, cap, unbounded)
+        fn, args = self._args(self._donation_copy(qb), cap, unbounded)
         return fn(*args)
 
     def compiled_text(self, q, batch):
@@ -1019,7 +1047,7 @@ class _ServeExec(_ExecBase):
         key = (
             "cost_profile", cfg.backend, cfg.interpret, cfg.mesh,
             cfg.data_axes, cfg.model_axis, self.cap, u_width, b,
-            q.unbounded,
+            q.unbounded, cfg.pred_index_layout, cfg.donate_batch,
         )
         prof = eng._programs.get(key)
         if prof is None:
@@ -1280,9 +1308,11 @@ class Engine:
     def _program(self, cfg: ExecConfig, cap: int, u_width: int, with_index: bool):
         """One cached compiled serve program per distinct geometry; shared
         by every executor of this engine."""
+        donate = cfg.donate_batch and cfg.mesh is None
         key = (
             cfg.backend, cfg.interpret, cfg.mesh, cfg.data_axes,
             cfg.model_axis, cap, u_width, with_index,
+            cfg.pred_index_layout, donate,
         )
         fn = self._programs.get(key)
         if fn is None:
@@ -1292,11 +1322,14 @@ class Engine:
             with obs.span("engine.program_build", cat="engine",
                           cap=cap, u_width=u_width, with_index=with_index,
                           sharded=cfg.mesh is not None):
-                pmeta = self.store.pred_index.meta if with_index else None
+                pmeta = (
+                    self.store.pred_index.select(cfg.pred_index_layout)[1]
+                    if with_index else None
+                )
                 if cfg.mesh is None:
                     fn = make_serve_step(
                         self.meta, cap, backend=cfg, pmeta=pmeta,
-                        u_width=u_width
+                        u_width=u_width, donate=donate,
                     )
                 else:
                     fn = make_sharded_serve_step(
@@ -1364,7 +1397,8 @@ class Engine:
         f = self._forest_for(cfg)
         fn = self._program(cfg, cap, u_width, with_index)
         if with_index:
-            r = fn(f, qb, self.store.pred_index.device)
+            dev = self.store.pred_index.select(cfg.pred_index_layout)[0]
+            r = fn(f, qb, dev)
         elif u_width > 0 and cfg.mesh is None:
             r = fn(f, qb, None)
         else:

@@ -21,7 +21,12 @@ import dataclasses
 import numpy as np
 
 from repro.core import k2forest, k2tree, predindex
-from repro.core.dictionary import TripleDictionary, build_dictionary
+from repro.core.dictionary import (
+    CompressedTripleDictionary,
+    TripleDictionary,
+    build_compressed_dictionary,
+    build_dictionary,
+)
 from repro.core.k2forest import ForestStats, K2Forest
 from repro.core.k2tree import K2Meta
 from repro.core.predindex import BuiltPredIndex
@@ -37,7 +42,7 @@ class K2TriplesStore:
     n_objects: int
     n_preds: int
     n_triples: int
-    dictionary: TripleDictionary | None = None
+    dictionary: TripleDictionary | CompressedTripleDictionary | None = None
     # k²-triples+ (arXiv:1310.4954): SP/OP candidate-predicate indexes that
     # turn the unbounded-?P sweep into a pruned scan.  None = sweep fallback.
     pred_index: BuiltPredIndex | None = None
@@ -50,7 +55,7 @@ def from_id_triples(
     n_subjects: int,
     n_objects: int,
     n_preds: int,
-    dictionary: TripleDictionary | None = None,
+    dictionary: TripleDictionary | CompressedTripleDictionary | None = None,
     k4_levels: int = k2tree.HYBRID_K4_LEVELS,
     with_pred_index: bool = True,
 ) -> K2TriplesStore:
@@ -89,8 +94,15 @@ def from_id_triples(
     )
 
 
-def from_string_triples(triples) -> K2TriplesStore:
-    d = build_dictionary(triples)
+def from_string_triples(triples, *, compressed: bool = True) -> K2TriplesStore:
+    """String triples -> store.  ``compressed=True`` (default) keeps the
+    dictionary as front-coded byte pools (:class:`CompressedTripleDictionary`,
+    same API); ``compressed=False`` keeps plain Python string tuples."""
+    d = (
+        build_compressed_dictionary(triples)
+        if compressed
+        else build_dictionary(triples)
+    )
     ids = d.encode_triples(triples)
     ids = np.unique(ids, axis=0)  # the paper cleans duplicate triples
     return from_id_triples(
@@ -128,6 +140,22 @@ def size_pred_index_bits(store: K2TriplesStore) -> int:
         return 0
     st = store.pred_index.stats
     return st.payload_bits + st.offsets_bits
+
+
+def size_dictionary_bits(store: K2TriplesStore) -> int:
+    """Measured dictionary bits: front-coded pools + EF offset indexes when
+    the store carries a :class:`CompressedTripleDictionary`; raw UTF-8 bytes
+    for a plain :class:`TripleDictionary`; 0 for ID-only stores."""
+    d = store.dictionary
+    if d is None:
+        return 0
+    if isinstance(d, CompressedTripleDictionary):
+        return d.size_bits()
+    return 8 * sum(
+        len(t.encode())
+        for terms in (d.so_terms, d.s_terms, d.o_terms, d.p_terms)
+        for t in terms
+    )
 
 
 def size_raw_triples_bits(n_triples: int) -> int:

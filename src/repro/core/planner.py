@@ -131,6 +131,32 @@ def step_estimate(
 # join-order search
 # ---------------------------------------------------------------------------
 
+# Per-op lane pricing: a pipeline step whose subject AND object are both
+# realized at launch time (constants or already-bound variables) runs as
+# OP_CHECK lanes — one fixed-depth traversal per lane, no frontier
+# expansion, no cap-wide decode — while any step with a free s/o position
+# runs OP_ROW/OP_COL scan lanes that expand a frontier and rake a cap-wide
+# result window.  Microbenches put a check lane at roughly a quarter of a
+# scan lane on both backends, and the exact ratio matters less than the
+# *ordering* signal: a cheap check over many rows can beat a selective
+# scan (see ``tests/test_planner.py::test_lane_pricing_flips_order``).
+LANE_PRICE_CHECK = 0.25
+LANE_PRICE_SCAN = 1.0
+
+
+def step_lane_price(pat: TriplePattern, bound_vars) -> float:
+    """Lane price of resolving ``pat`` against rows where ``bound_vars``
+    carry values: check-shaped steps (s and o both realized — the
+    ``_resolve_with_bindings`` existence-check branch, whether or not ?p
+    is free) are cheap; anything with a free s/o position scans."""
+
+    def realized(t: Term) -> bool:
+        return (not _is_var(t)) or t in bound_vars
+
+    if realized(pat.s) and realized(pat.o):
+        return LANE_PRICE_CHECK
+    return LANE_PRICE_SCAN
+
 
 def greedy_order(
     store: K2TriplesStore, patterns: list[TriplePattern], bound0=frozenset()
@@ -172,33 +198,42 @@ def order_cost(
     patterns: list[TriplePattern],
     order,
     bound0=frozenset(),
+    *,
+    lane_pricing: bool = True,
 ) -> float:
     """Modelled cost of executing ``patterns`` in ``order``: the sum of
-    estimated rows flowing INTO each step — each binding row is one lane
-    of the step's flat launch, so this is the total lane-work of the
-    pipeline.  The first unseeded step has no input rows; its cost is its
-    own enumeration (estimated output).  The final result cardinality is
-    deliberately NOT counted: it is order-invariant in reality, but its
-    *estimate* is order-sensitive, and letting it into the objective
-    biases the search toward orders that merely under-estimate it."""
+    estimated rows flowing INTO each step, each weighted by the step's
+    per-op lane price (:func:`step_lane_price` — check lanes cost a
+    fraction of scan lanes; ``lane_pricing=False`` restores the uniform
+    rows-only model for comparison).  The first unseeded step has no
+    input rows; its cost is its own enumeration (estimated output,
+    unpriced).  The final result cardinality is deliberately NOT counted:
+    it is order-invariant in reality, but its *estimate* is
+    order-sensitive, and letting it into the objective biases the search
+    toward orders that merely under-estimate it."""
     bound = set(bound0)
     rows = 1.0
     cost = 0.0
     for k, i in enumerate(order):
         rows_in = rows
+        price = step_lane_price(patterns[i], bound) if lane_pricing else 1.0
         rows *= step_estimate(store, patterns[i], bound)
-        cost += rows if (k == 0 and not bound0) else rows_in
+        cost += rows if (k == 0 and not bound0) else rows_in * price
         bound |= patterns[i].variables
     return cost
 
 
 def cost_order(
-    store: K2TriplesStore, patterns: list[TriplePattern], bound0=frozenset()
+    store: K2TriplesStore, patterns: list[TriplePattern], bound0=frozenset(),
+    *, lane_pricing: bool = True,
 ) -> list[int]:
     """Cost-based join order: exhaustive bitmask DP for blocks of ≤
-    :data:`DP_LIMIT` patterns minimizing :func:`order_cost`; greedy
-    beyond.  Cost ties break lexicographically by order tuple, i.e. by
-    pattern index — same determinism contract as :func:`greedy_order`."""
+    :data:`DP_LIMIT` patterns minimizing :func:`order_cost` (including
+    its per-op lane pricing — the DP transition and :func:`order_cost`
+    MUST price identically or the search optimizes the wrong objective);
+    greedy beyond.  Cost ties break lexicographically by order tuple,
+    i.e. by pattern index — same determinism contract as
+    :func:`greedy_order`."""
     n = len(patterns)
     if n > DP_LIMIT:
         return greedy_order(store, patterns, bound0)
@@ -208,9 +243,10 @@ def cost_order(
         rows = step_estimate(store, patterns[i], bound0) if bound0 else (
             estimate_cardinality(store, patterns[i])
         )
+        price = step_lane_price(patterns[i], bound0) if lane_pricing else 1.0
         # first-step cost mirrors order_cost: its enumeration when
-        # unseeded, one (constant) seeded launch otherwise
-        best[1 << i] = (rows if not bound0 else 1.0, rows, (i,))
+        # unseeded, one (constant, priced) seeded launch otherwise
+        best[1 << i] = (rows if not bound0 else price, rows, (i,))
     full = (1 << n) - 1
     for mask in range(1, full + 1):
         cur = best.get(mask)
@@ -224,10 +260,12 @@ def cost_order(
             bit = 1 << j
             if mask & bit:
                 continue
+            price = step_lane_price(patterns[j], bound) if lane_pricing else 1.0
             nrows = rows * step_estimate(store, patterns[j], bound)
             # lane-work model: the step costs its INPUT rows (launch
-            # lanes), not its estimated output — see order_cost
-            cand = (cost + rows, nrows, order + (j,))
+            # lanes) times its lane price, not its estimated output —
+            # see order_cost
+            cand = (cost + rows * price, nrows, order + (j,))
             prev = best.get(mask | bit)
             if prev is None or (cand[0], cand[2]) < (prev[0], prev[2]):
                 best[mask | bit] = cand

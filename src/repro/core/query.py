@@ -59,6 +59,7 @@ from typing import Any
 Term = Any  # int (bound 1-based id) | str "?name" | None (anonymous variable)
 
 SCAN_BACKENDS = ("pallas", "jnp")
+PRED_INDEX_LAYOUTS = ("dac", "fixed")
 
 
 class CapOverflow(RuntimeError):
@@ -132,6 +133,21 @@ class ExecConfig:
         lane (the index's ``truncated`` bit) are routed to the all-preds
         sweep fallback, so answers stay exact.  ``1.0`` = exact sizing
         from ``max_degree`` (no outliers).
+    ``pred_index_layout``
+        On-device layout of the SP/OP predicate index: "dac" (default —
+        multi-level DAC(b=8) chunks + flag bitmaps, decoded inside the
+        gather kernel) or "fixed" (byte-packed fallback).  Part of the
+        program cache key, so plans over different layouts coexist;
+        results are bit-identical across layouts (the differential suite
+        enforces this).
+    ``donate_batch``
+        Donate the per-batch query-key buffers (the ``ServeBatch`` /
+        lane arrays) to the compiled serve-step program
+        (``jax.jit(donate_argnums=...)``), letting XLA alias their device
+        memory for outputs on the hot dispatch path.  The engine copies
+        caller-held device arrays defensively before a donating call, so
+        semantics don't change; host (numpy) inputs are unaffected.
+        Ignored (off) for sharded programs.
     ``mesh`` / ``data_axes`` / ``model_axis``
         When ``mesh`` is set, plans compile the shard_map'd serve step:
         forest sharded by predicate over ``model_axis``, query batches
@@ -145,6 +161,8 @@ class ExecConfig:
     cap_policy: CapPolicy = CapPolicy()
     use_pred_index: bool = True
     u_width_quantile: float = 1.0
+    pred_index_layout: str = "dac"
+    donate_batch: bool = True
     mesh: Any = None  # jax.sharding.Mesh | None (Mesh is hashable)
     data_axes: tuple[str, ...] = ("data",)
     model_axis: str = "model"
@@ -160,6 +178,11 @@ class ExecConfig:
             )
         if self.cap < 1 or self.cap_y < 1:
             raise ValueError("cap and cap_y must be >= 1")
+        if self.pred_index_layout not in PRED_INDEX_LAYOUTS:
+            raise ValueError(
+                f"unknown pred_index_layout {self.pred_index_layout!r} "
+                f"(want one of {PRED_INDEX_LAYOUTS})"
+            )
 
     @classmethod
     def from_env(cls, **overrides) -> "ExecConfig":
@@ -181,6 +204,10 @@ class ExecConfig:
             raw = os.environ.get("REPRO_PALLAS_INTERPRET")
             overrides["interpret"] = (
                 default_interpret() if raw is None else raw != "0"
+            )
+        if "pred_index_layout" not in overrides:
+            overrides["pred_index_layout"] = os.environ.get(
+                "REPRO_PRED_INDEX_LAYOUT", "dac"
             )
         return cls(**overrides)
 

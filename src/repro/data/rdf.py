@@ -130,6 +130,22 @@ def to_strings(ds: RdfDataset) -> list[tuple[str, str, str]]:
     return out
 
 
+def generate_strings(
+    n_triples: int, *, like: str | None = None, seed: int = 0, **kw
+) -> list[tuple[str, str, str]]:
+    """Synthetic *string* triples for the dictionary/end-to-end path.
+
+    ``like`` scales a paper dataset's ratios (as ``generate_like``);
+    otherwise ``kw`` is forwarded to ``generate``.  URIs honor the SO
+    overlap so the shared [1,|SO|] range is exercised.
+    """
+    if like is not None:
+        ds = generate_like(like, n_triples, seed)
+    else:
+        ds = generate(n_triples, seed=seed, **kw)
+    return to_strings(ds)
+
+
 def parse_n3(text: str) -> list[tuple[str, str, str]]:
     """Minimal N3/N-Triples subset: ``<s> <p> <o> .`` / quoted literals."""
     triples = []

@@ -257,23 +257,36 @@ def pred_gather_index(
     """Kernel-backed candidate-predicate gather over a PredIndex.
 
     Drop-in compute for ``core.predindex.gather_batch`` (which routes here
-    when the scan backend is "pallas").  Rows are clipped to the index range
-    and padded up to a ``block_q`` multiple; padded lanes read row 0 and are
-    sliced off.  Returns (ids, valid, count, overflow).
+    when the scan backend is "pallas").  The decode layout follows
+    ``pmeta.layout``: "dac" launches the on-device DAC(b=8) decode kernel,
+    "fixed" the byte-packed direct-access kernel.  Rows are clipped to the
+    index range and padded up to a ``block_q`` multiple; padded lanes read
+    row 0 and are sliced off.  Returns (ids, valid, count, overflow).
     """
     (q,) = jnp.shape(rows)
     bq = min(block_q, max(1, q))
     pad = (-q) % bq
     rows = jnp.clip(
-        jnp.asarray(rows, jnp.int32), 0, index.offsets.shape[0] - 2
+        jnp.asarray(rows, jnp.int32), 0,
+        max(pmeta.n_subjects + pmeta.n_objects - 1, 0),
     )
     if pad:
         rows = jnp.pad(rows, (0, pad))
-    ids, valid, count, overflow = _pg.pred_gather(
-        rows, index.offsets, index.words,
-        bytes_per_pred=pmeta.bytes_per_pred, cap=cap, block_q=bq,
-        interpret=pallas_interpret(interpret),
-    )
+    if getattr(pmeta, "layout", "fixed") == "dac":
+        ids, valid, count, overflow = _pg.pred_gather_dac(
+            rows, index.offsets, index.words, index.degs, index.flags,
+            index.frank, levels=pmeta.levels,
+            level_byte_start=pmeta.level_byte_start,
+            flag_word_start=pmeta.flag_word_start,
+            deg_width=pmeta.deg_width, rows_per_block=pmeta.rows_per_block,
+            cap=cap, block_q=bq, interpret=pallas_interpret(interpret),
+        )
+    else:
+        ids, valid, count, overflow = _pg.pred_gather(
+            rows, index.offsets, index.words,
+            bytes_per_pred=pmeta.bytes_per_pred, cap=cap, block_q=bq,
+            interpret=pallas_interpret(interpret),
+        )
     return ids[:q], valid[:q], count[:q], overflow[:q]
 
 

@@ -21,6 +21,26 @@ straddles a word.  Outputs follow the ``QueryResult`` contract: ``ids``
 ``valid`` mask, ``count`` = min(deg, L), ``overflow`` = deg > L.  Bit-exact
 against ``ref.pred_gather_ref`` and ``predindex._gather_traced``
 (tests/test_pred_gather.py).
+
+``pred_gather_dac`` is the same launch layout over the DAC(b=8) layout
+(``predindex`` ``layout="dac"``), decoding the compressed index entirely
+on device:
+
+    1. row pointers: ``start = anchors[row / RB] + Σ_{k < row mod RB}
+       deg[k]`` — the packed ``deg_width``-bit degrees of one block span
+       exactly 4 uint32 words, so the sum is a statically unrolled masked
+       SWAR loop; ``deg`` itself is one more gather + shift + mask.
+    2. chunk decode: lane j reads level-0 byte ``start + j``; while the
+       level's continuation flag is set, the flag's in-level rank
+       (``frank[word] + popcount(word & below)``) is the lane's position
+       in the next level's byte stream, whose chunk ors in at bits 8·l.
+    3. gaps → ids: an in-kernel log-doubling prefix sum over the lane
+       axis turns the recovered gaps back into ascending 0-based
+       predicate ids (first gap is id+1, so the running sum minus 1).
+
+Bit-exact against ``ref.pred_gather_dac_ref`` (vectorized jnp with
+``jnp.cumsum`` — an independent implementation) and the fixed-width
+baseline on the same store (tests/test_pred_gather.py).
 """
 
 from __future__ import annotations
@@ -97,3 +117,147 @@ def pred_gather(
         ),
         interpret=interpret,
     )(rows.astype(jnp.int32), offsets, words)
+
+
+def _popcount32(w: jax.Array) -> jax.Array:
+    """SWAR popcount of uint32 lanes -> int32 (no population_count dep)."""
+    w = w - ((w >> jnp.uint32(1)) & jnp.uint32(0x55555555))
+    w = (w & jnp.uint32(0x33333333)) + ((w >> jnp.uint32(2)) & jnp.uint32(0x33333333))
+    w = (w + (w >> jnp.uint32(4))) & jnp.uint32(0x0F0F0F0F)
+    return ((w * jnp.uint32(0x01010101)) >> jnp.uint32(24)).astype(jnp.int32)
+
+
+def _make_dac_kernel(
+    cap: int,
+    levels: int,
+    level_byte_start: tuple,
+    flag_word_start: tuple,
+    deg_width: int,
+    rows_per_block: int,
+):
+    per_word = 32 // deg_width
+    dmask_val = (1 << deg_width) - 1 if deg_width < 32 else 0xFFFFFFFF
+
+    def kernel(rows_ref, anchors_ref, words_ref, degs_ref, flags_ref,
+               frank_ref, ids_ref, valid_ref, count_ref, ovf_ref):
+        dmask = jnp.uint32(dmask_val)
+        rows = rows_ref[...]
+        anchors = anchors_ref[...]
+        words = words_ref[...]
+        degs = degs_ref[...]
+        flags = flags_ref[...]
+        frank = frank_ref[...]
+
+        block = rows // rows_per_block
+        within = rows % rows_per_block
+        w0 = block * 4
+        start = anchors[jnp.clip(block, 0, anchors.shape[0] - 1)]
+        # masked SWAR sum of the degrees before `within` inside the block:
+        # static unroll over the block's 4 packed words x per_word lanes
+        for k in range(4):
+            dword = degs[jnp.clip(w0 + k, 0, degs.shape[0] - 1)]
+            for j in range(per_word):
+                idx = k * per_word + j
+                dv = ((dword >> jnp.uint32(j * deg_width)) & dmask).astype(
+                    jnp.int32
+                )
+                start = start + dv * (idx < within).astype(jnp.int32)
+        dword = degs[jnp.clip(w0 + within // per_word, 0, degs.shape[0] - 1)]
+        dsh = ((within % per_word) * deg_width).astype(jnp.uint32)
+        deg = ((dword >> dsh) & dmask).astype(jnp.int32)
+
+        def byte_at(bidx):
+            w = words[jnp.clip(bidx >> 2, 0, words.shape[0] - 1)]
+            return ((w >> ((bidx & 3) * 8).astype(jnp.uint32))
+                    & jnp.uint32(0xFF)).astype(jnp.int32)
+
+        lane = jnp.arange(cap, dtype=jnp.int32)[None, :]
+        n = jnp.minimum(deg, cap)
+        valid = lane < n[:, None]
+        pos = jnp.where(valid, start[:, None] + lane, 0)
+        gap = byte_at(level_byte_start[0] + pos)
+        alive = valid
+        for lvl in range(levels - 1):
+            fidx = jnp.clip(
+                flag_word_start[lvl] + (pos >> 5), 0, flags.shape[0] - 1
+            )
+            fword = flags[fidx]
+            sh = (pos & 31).astype(jnp.uint32)
+            bit = ((fword >> sh) & jnp.uint32(1)) == 1
+            low = fword & ((jnp.uint32(1) << sh) - jnp.uint32(1))
+            rank = frank[fidx] + _popcount32(low)
+            alive = alive & bit
+            pos = jnp.where(alive, rank, 0)
+            chunk = byte_at(level_byte_start[lvl + 1] + pos)
+            gap = gap + jnp.where(alive, chunk << (8 * (lvl + 1)), 0)
+
+        # log-doubling inclusive prefix sum along the lane axis (the
+        # Pallas-side independent implementation vs the ref's jnp.cumsum)
+        acc = jnp.where(valid, gap, 0)
+        d = 1
+        while d < cap:
+            shifted = jnp.where(lane >= d, jnp.roll(acc, d, axis=1), 0)
+            acc = acc + shifted
+            d *= 2
+        preds = acc - 1
+        ids_ref[...] = jnp.where(valid, preds, 0)
+        valid_ref[...] = valid
+        count_ref[...] = n.astype(jnp.int32)
+        ovf_ref[...] = deg > cap
+
+    return kernel
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "levels", "level_byte_start", "flag_word_start", "deg_width",
+        "rows_per_block", "cap", "block_q", "interpret",
+    ),
+)
+def pred_gather_dac(
+    rows: jax.Array,
+    anchors: jax.Array,
+    words: jax.Array,
+    degs: jax.Array,
+    flags: jax.Array,
+    frank: jax.Array,
+    *,
+    levels: int,
+    level_byte_start: tuple,
+    flag_word_start: tuple,
+    deg_width: int,
+    rows_per_block: int,
+    cap: int,
+    block_q: int = 256,
+    interpret: bool = False,
+):
+    """Batched DAC(b=8) predicate-list gather + on-device decode.
+
+    Returns ``(ids, valid, count, overflow)`` with shapes
+    ``(Q, cap) / (Q, cap) / (Q,) / (Q,)``.  Q must divide by block_q;
+    ``rows`` must be pre-clipped to ``[0, n_rows - 1]``.
+    """
+    (q,) = rows.shape
+    assert q % block_q == 0, (q, block_q)
+    grid = (q // block_q,)
+    whole = lambda a: pl.BlockSpec(a.shape, lambda i: tuple(0 for _ in a.shape))
+    qvec = pl.BlockSpec((block_q,), lambda i: (i,))
+    qmat = pl.BlockSpec((block_q, cap), lambda i: (i, 0))
+    return pl.pallas_call(
+        _make_dac_kernel(
+            cap, levels, level_byte_start, flag_word_start, deg_width,
+            rows_per_block,
+        ),
+        grid=grid,
+        in_specs=[qvec, whole(anchors), whole(words), whole(degs),
+                  whole(flags), whole(frank)],
+        out_specs=(qmat, qmat, qvec, qvec),
+        out_shape=(
+            jax.ShapeDtypeStruct((q, cap), jnp.int32),
+            jax.ShapeDtypeStruct((q, cap), jnp.bool_),
+            jax.ShapeDtypeStruct((q,), jnp.int32),
+            jax.ShapeDtypeStruct((q,), jnp.bool_),
+        ),
+        interpret=interpret,
+    )(rows.astype(jnp.int32), anchors, words, degs, flags, frank)

@@ -247,6 +247,78 @@ def pred_gather_ref(
     return ids, valid, n.astype(jnp.int32), deg > cap
 
 
+def pred_gather_dac_ref(
+    rows: jax.Array,
+    anchors: jax.Array,
+    words: jax.Array,
+    degs: jax.Array,
+    flags: jax.Array,
+    frank: jax.Array,
+    *,
+    levels: int,
+    level_byte_start: tuple,
+    flag_word_start: tuple,
+    deg_width: int,
+    rows_per_block: int,
+    cap: int,
+):
+    """Identical semantics to kernels.pred_gather_dac, on raw DAC arrays.
+
+    Decodes the multi-level DAC(b=8) payload of ``core/predindex``
+    (``layout="dac"``): row pointers are reconstructed from one int32
+    anchor per ``rows_per_block`` rows plus ``deg_width``-bit packed
+    degrees; per lane, the level-0 chunk is read at ``start + lane``, and
+    each continuation flag's in-level rank re-addresses the lane into the
+    next level's byte stream; the recovered gaps prefix-sum back to
+    0-based predicate ids.  This reference is vectorized jnp with
+    ``jnp.cumsum``; the Pallas kernel uses a log-doubling prefix sum and a
+    masked SWAR loop — two independent implementations for the
+    differential harness.  Returns (ids, valid, count, overflow).
+    """
+    rows = jnp.asarray(rows, jnp.int32)
+    per_word = 32 // deg_width
+    dmask = jnp.uint32((1 << deg_width) - 1 if deg_width < 32 else 0xFFFFFFFF)
+    block = rows // rows_per_block
+    within = rows % rows_per_block
+
+    kidx = jnp.arange(rows_per_block, dtype=jnp.int32)
+    widx = block[:, None] * 4 + kidx[None, :] // per_word
+    dword = degs[jnp.clip(widx, 0, degs.shape[0] - 1)]
+    shift = ((kidx % per_word) * deg_width).astype(jnp.uint32)
+    dvals = ((dword >> shift[None, :]) & dmask).astype(jnp.int32)  # (B, rb)
+    start = anchors[jnp.clip(block, 0, anchors.shape[0] - 1)] + jnp.sum(
+        dvals * (kidx[None, :] < within[:, None]), axis=1
+    )
+    deg = jnp.take_along_axis(dvals, within[:, None], axis=1)[:, 0]
+
+    def byte_at(bidx):
+        w = words[jnp.clip(bidx >> 2, 0, words.shape[0] - 1)]
+        return ((w >> ((bidx & 3) * 8).astype(jnp.uint32)) & 0xFF).astype(
+            jnp.int32
+        )
+
+    lane = jnp.arange(cap, dtype=jnp.int32)[None, :]
+    n = jnp.minimum(deg, cap)
+    valid = lane < n[:, None]
+    pos = jnp.where(valid, start[:, None] + lane, 0)
+    gap = byte_at(level_byte_start[0] + pos)
+    alive = valid
+    for lvl in range(levels - 1):
+        fidx = jnp.clip(flag_word_start[lvl] + (pos >> 5), 0, flags.shape[0] - 1)
+        fword = flags[fidx]
+        sh = (pos & 31).astype(jnp.uint32)
+        bit = ((fword >> sh) & 1) == 1
+        low = fword & ((jnp.uint32(1) << sh) - jnp.uint32(1))
+        rank = frank[fidx] + popcount_ref(low)
+        alive = alive & bit
+        pos = jnp.where(alive, rank, 0)
+        chunk = byte_at(level_byte_start[lvl + 1] + pos)
+        gap = gap + jnp.where(alive, chunk << (8 * (lvl + 1)), 0)
+    preds = jnp.cumsum(jnp.where(valid, gap, 0), axis=1) - 1
+    ids = jnp.where(valid, preds, 0).astype(jnp.int32)
+    return ids, valid, n.astype(jnp.int32), deg > cap
+
+
 def sorted_intersect_mask_ref(a_ids: jax.Array, b_ids: jax.Array) -> jax.Array:
     pos = jnp.searchsorted(b_ids, a_ids)
     got = jnp.take(b_ids, jnp.clip(pos, 0, b_ids.shape[0] - 1), mode="clip")

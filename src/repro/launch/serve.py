@@ -128,6 +128,7 @@ def run_bench(
     max_batch: int = 256,
     deadline_ms: float = 2.0,
     backend: str | None = None,
+    donate: bool | None = None,
     sharded: bool = False,
     unbounded: bool = True,
     select_frac: float = 0.0,
@@ -180,6 +181,8 @@ def run_bench(
     overrides: dict = {"cap": cap}
     if backend is not None:
         overrides["backend"] = backend
+    if donate is not None:
+        overrides["donate_batch"] = donate
     mesh_shape = None
     if sharded:
         if n_dev < 2:
@@ -260,6 +263,8 @@ def run_bench(
         "selects": stats["selects"],
         "cap": cap,
         "max_batch": max_batch,
+        "donate": cfg.donate_batch and cfg.mesh is None,
+        "pred_index_layout": cfg.pred_index_layout,
         "deadline_ms": deadline_ms,
         "wall_s": wall,
         "qps": n_queries / wall,
@@ -339,6 +344,10 @@ def main(argv=None) -> None:
     )
     ap.add_argument("--sharded", action="store_true", help="shard over local devices")
     ap.add_argument(
+        "--no-donate", action="store_true",
+        help="disable per-batch buffer donation (the before/after knob)",
+    )
+    ap.add_argument(
         "--bounded-only", action="store_true",
         help="trace without unbounded-?P ops (compiles the u_* block out)",
     )
@@ -377,6 +386,7 @@ def main(argv=None) -> None:
         n_queries=args.queries, zipf_a=args.zipf, cap=args.cap,
         max_batch=args.batch, deadline_ms=args.deadline_ms,
         backend=args.backend, sharded=args.sharded,
+        donate=(False if args.no_donate else None),
         unbounded=not args.bounded_only, select_frac=args.select_frac,
         seed=args.seed,
     )

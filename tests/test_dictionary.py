@@ -1,0 +1,189 @@
+"""The compressed dictionary layer: Elias–Fano access, bucketed plain
+front coding (locate/extract inverses, bucket-boundary exactness), the
+4-range :class:`CompressedTripleDictionary` vs the plain
+:class:`TripleDictionary` oracle, and the measured-vs-analytic size
+contract that keeps ``bench_compression``'s end-to-end column honest."""
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core import k2triples
+from repro.core.dictionary import (
+    CompressedTripleDictionary,
+    EliasFano,
+    FrontCodedStrings,
+    build_compressed_dictionary,
+    build_dictionary,
+)
+from repro.data import rdf
+
+
+# ---------------------------------------------------------------------------
+# Elias–Fano
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(min_value=0, max_value=50), max_size=60))
+def test_elias_fano_access_property(deltas):
+    """EF[i] == values[i] for any non-decreasing sequence (built here as a
+    cumsum of non-negative deltas, covering runs of equal values)."""
+    values = np.cumsum(np.asarray(deltas, np.int64)).tolist()
+    ef = EliasFano(values)
+    assert len(ef) == len(values)
+    assert [ef[i] for i in range(len(ef))] == values
+
+
+def test_elias_fano_edges_and_validation():
+    assert len(EliasFano([])) == 0
+    ef1 = EliasFano([0])
+    assert ef1[0] == 0
+    with pytest.raises(IndexError):
+        ef1[1]
+    with pytest.raises(ValueError):
+        EliasFano([3, 2])
+    with pytest.raises(ValueError):
+        EliasFano([-1, 2])
+    # sparse universe: l > 0 and the low-bit plane is exercised
+    big = [i * 977 for i in range(100)]
+    ef = EliasFano(big)
+    assert ef._l > 0
+    assert [ef[i] for i in range(100)] == big
+    # dense: l == 0, pure unary high bits
+    dense = list(range(64))
+    ef0 = EliasFano(dense)
+    assert ef0._l == 0
+    assert [ef0[i] for i in range(64)] == dense
+
+
+def test_elias_fano_measured_vs_analytic():
+    """Measured bits (words + rank blocks) stay within a small constant
+    factor of the n*(2 + l) textbook bound on a realistic offset shape."""
+    vals = np.cumsum(np.random.default_rng(0).integers(8, 64, 2000)).tolist()
+    ef = EliasFano(vals)
+    assert ef.analytic_bits() <= ef.size_bits() <= 3 * ef.analytic_bits() + 4 * 32
+    # far below raw 32-bit storage
+    assert ef.size_bits() < 32 * len(vals) / 2
+
+
+# ---------------------------------------------------------------------------
+# front-coded pool
+# ---------------------------------------------------------------------------
+
+
+def _uri_terms(n, seed=0):
+    rng = np.random.default_rng(seed)
+    terms = {f"http://ex.org/r/{int(i):07d}" for i in rng.integers(0, 10**7, n)}
+    terms |= {f"urn:uuid:{int(i):04x}" for i in rng.integers(0, 16**4, n // 4)}
+    return sorted(terms)
+
+
+@pytest.mark.parametrize("bucket", [1, 3, 8])
+def test_front_coding_extract_locate_inverse(bucket):
+    """extract(locate(t)) == t and locate(extract(i)) == i for every term,
+    at bucket sizes that land term counts on and off bucket boundaries."""
+    terms = _uri_terms(400)
+    fc = FrontCodedStrings(terms, bucket=bucket)
+    assert len(fc) == len(terms)
+    for i, t in enumerate(terms):
+        assert fc[i] == t
+        assert fc.locate(t) == i
+    # misses: below the first head, above the last term, and near-hits
+    assert fc.locate("") == -1
+    assert fc.locate("zzzz") == -1
+    assert fc.locate(terms[0] + "x") == -1
+    assert fc.locate(terms[0][:-1]) == -1
+
+
+def test_front_coding_exact_bucket_boundaries():
+    """n a multiple of the bucket size: the final bucket is full, and the
+    head of every bucket round-trips (head decoding is the locate hot
+    path)."""
+    bucket = 8
+    terms = _uri_terms(1000)[: 12 * bucket]
+    fc = FrontCodedStrings(terms, bucket=bucket)
+    for b in range(12):
+        assert fc[b * bucket] == terms[b * bucket]
+        assert fc.locate(terms[b * bucket]) == b * bucket
+    # and one past every boundary
+    for b in range(12):
+        assert fc[b * bucket + 1] == terms[b * bucket + 1]
+
+
+def test_front_coding_unicode_and_empty():
+    fc = FrontCodedStrings([], bucket=8)
+    assert len(fc) == 0 and fc.locate("x") == -1
+    terms = sorted({"", "a", "aé", "aé中", "béta", "中文"})
+    fc = FrontCodedStrings(terms, bucket=2)
+    for i, t in enumerate(terms):
+        assert fc[i] == t and fc.locate(t) == i
+
+
+def test_front_coding_measured_vs_analytic():
+    """The size contract: measured bits (blob + EF incl. rank blocks) stay
+    within 25% of the analytic figure, and well under raw UTF-8."""
+    terms = _uri_terms(3000, seed=2)
+    fc = FrontCodedStrings(terms, bucket=8)
+    raw_bits = 8 * sum(len(t.encode()) for t in terms)
+    assert fc.analytic_bits() <= fc.size_bits() <= 1.25 * fc.analytic_bits()
+    assert fc.size_bits() < raw_bits / 2
+    assert fc.size_bytes() == (fc.size_bits() + 7) // 8
+
+
+# ---------------------------------------------------------------------------
+# the 4-range compressed dictionary
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def string_corpus():
+    return rdf.generate_strings(3000, like="geonames", seed=4)
+
+
+def test_compressed_dictionary_matches_plain(string_corpus):
+    """Differential vs the tuple-backed TripleDictionary: same ranges,
+    same ids, same decodes, KeyError on the same unknowns."""
+    strs = string_corpus
+    cd = build_compressed_dictionary(strs)
+    pd = build_dictionary(strs)
+    assert (cd.n_so, cd.n_subjects, cd.n_objects, cd.n_preds) == (
+        pd.n_so, pd.n_subjects, pd.n_objects, pd.n_preds,
+    )
+    assert cd.matrix_extent == pd.matrix_extent
+    enc_c = cd.encode_triples(strs[:500])
+    enc_p = pd.encode_triples(strs[:500])
+    assert np.array_equal(enc_c, enc_p)
+    for (s, p, o), (si, pi, oi) in zip(strs[:200], enc_c[:200]):
+        assert cd.decode_subject(int(si)) == s
+        assert cd.decode_predicate(int(pi)) == p
+        assert cd.decode_object(int(oi)) == o
+    for fn in (cd.encode_subject, cd.encode_object, cd.encode_predicate):
+        with pytest.raises(KeyError):
+            fn("http://nowhere/at/all")
+    # the tuple-compat properties materialize the same term lists
+    assert cd.so_terms == pd.so_terms
+    assert cd.p_terms == pd.p_terms
+
+
+def test_compressed_dictionary_size_contract(string_corpus):
+    cd = build_compressed_dictionary(string_corpus)
+    assert cd.analytic_bits() <= cd.size_bits() <= 1.25 * cd.analytic_bits()
+    assert cd.size_bits() < cd.raw_bits() / 2
+
+
+def test_store_string_path_uses_compressed_dictionary(string_corpus):
+    """from_string_triples defaults to the compressed dictionary and the
+    two dictionary flavors build IDENTICAL stores."""
+    strs = string_corpus[:800]
+    st_c = k2triples.from_string_triples(strs)
+    st_p = k2triples.from_string_triples(strs, compressed=False)
+    assert isinstance(st_c.dictionary, CompressedTripleDictionary)
+    assert st_c.n_triples == st_p.n_triples
+    assert np.array_equal(
+        np.asarray(st_c.forest.t_words), np.asarray(st_p.forest.t_words)
+    )
+    bits_c = k2triples.size_dictionary_bits(st_c)
+    bits_p = k2triples.size_dictionary_bits(st_p)
+    assert 0 < bits_c < bits_p  # compressed beats raw UTF-8 accounting

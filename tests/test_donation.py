@@ -1,0 +1,151 @@
+"""Buffer-donation tripwires for the pooled serve programs.
+
+``ExecConfig.donate_batch`` makes the single-device serve program donate
+its per-batch ``ServeBatch`` buffers to XLA (outputs may alias the batch
+memory).  The hazards this suite pins down:
+
+  * a donating program really consumes a device batch (``is_deleted()``)
+    — if donation silently stops plumbing through, the perf win vanishes
+    with no functional signal;
+  * the engine's executors defensively COPY caller batches per dispatch,
+    so a caller-held device batch survives ``plan(batch)`` and can be
+    resubmitted — including across a cap-growth recompile, where the SAME
+    logical batch is dispatched twice (the retry must not see a deleted
+    buffer);
+  * ``donate_batch=False`` restores non-consuming programs bit-exactly;
+  * sharded configs never donate, whatever the flag says.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import engine as eng, k2triples
+from repro.core.query import ExecConfig, ServeQ
+from repro.data import rdf
+
+from oracle import assert_results_identical
+
+
+@pytest.fixture(scope="module")
+def store_and_ids():
+    ds = rdf.generate(3000, n_subjects=64, n_preds=8, n_objects=80, seed=3)
+    store = k2triples.from_id_triples(
+        ds.ids, n_so=ds.n_so, n_subjects=ds.n_subjects,
+        n_objects=ds.n_objects, n_preds=ds.n_preds,
+    )
+    return store, ds.ids
+
+
+def _device_batch(store, b=8, seed=0):
+    rng = np.random.default_rng(seed)
+    ops = np.array([i % 3 for i in range(b)], np.int32)
+    return eng.ServeBatch(
+        op=jnp.asarray(ops),
+        s=jnp.asarray(rng.integers(1, store.n_subjects + 1, b), jnp.int32),
+        p=jnp.asarray(rng.integers(1, store.n_preds + 1, b), jnp.int32),
+        o=jnp.asarray(rng.integers(1, store.n_objects + 1, b), jnp.int32),
+    )
+
+
+@pytest.mark.filterwarnings("ignore:Some donated buffers were not usable")
+def test_donating_program_consumes_device_batch(store_and_ids):
+    """make_serve_step(donate=True) really donates: at least one batch
+    buffer is consumed by the call (XLA aliases what it can — buffers it
+    cannot use stay alive, with a warning this test tolerates), and the
+    result matches the non-donating program on an identical batch.  If
+    donation silently stops plumbing through, NO buffer is deleted and
+    this trips."""
+    store, _ = store_and_ids
+    step_d = eng.make_serve_step(store.meta, 32, backend="jnp", donate=True)
+    step_n = eng.make_serve_step(store.meta, 32, backend="jnp", donate=False)
+    qb = _device_batch(store)
+    qb2 = eng.ServeBatch(*(jnp.array(a, copy=True) for a in qb))
+    r_n = step_n(store.forest, qb2)
+    r_d = step_d(store.forest, qb)
+    assert_results_identical(tuple(r_d), tuple(r_n), "donate-vs-not")
+    assert any(a.is_deleted() for a in qb), "donated batch must be consumed"
+    assert not any(a.is_deleted() for a in qb2)
+
+
+@pytest.mark.parametrize("donate", [True, False])
+def test_plan_leaves_caller_batch_alive(store_and_ids, donate):
+    """The pooled Plan path defensively copies: a caller-held device batch
+    survives the call under donation and can be resubmitted, and the
+    donate flag never changes answers."""
+    store, _ = store_and_ids
+    E = eng.Engine(store)
+    plan = E.compile(
+        ServeQ(unbounded=False),
+        ExecConfig(backend="jnp", cap=64, donate_batch=donate),
+    )
+    qb = _device_batch(store, seed=1)
+    r1 = plan(qb)
+    assert not any(a.is_deleted() for a in qb), "caller batch was consumed"
+    r2 = plan(qb)  # resubmitting the same buffers must be legal
+    assert_results_identical(tuple(r1), tuple(r2), f"resubmit[{donate}]")
+
+
+def test_donation_survives_cap_growth_recompile(store_and_ids):
+    """The tripwire for the double-dispatch hazard: a batch that overflows
+    the initial cap makes ``Plan`` recompile at doubled cap and re-run the
+    SAME logical batch — each dispatch must get fresh buffers or the retry
+    dies on a deleted donated array."""
+    store, ids = store_and_ids
+    sp, counts = np.unique(ids[:, :2], axis=0, return_counts=True)
+    k = int(np.argmax(counts))
+    deg_s, deg_p, deg = int(sp[k, 0]), int(sp[k, 1]), int(counts[k])
+    assert deg >= 2, "need a row with degree >= 2 to overflow cap=1"
+    E = eng.Engine(store_and_ids[0])
+    plan = E.compile(
+        ServeQ(unbounded=False),
+        ExecConfig(backend="jnp", cap=1, donate_batch=True),
+    )
+    qb = eng.ServeBatch(
+        op=jnp.asarray([eng.OP_ROW], jnp.int32),
+        s=jnp.asarray([deg_s], jnp.int32),
+        p=jnp.asarray([deg_p], jnp.int32),
+        o=jnp.asarray([0], jnp.int32),
+    )
+    r = plan(qb)  # grows cap at least once, re-dispatching qb
+    assert plan.effective_cap >= 2
+    assert not any(a.is_deleted() for a in qb)
+    got = np.asarray(r.ids[0])[np.asarray(r.valid[0])]
+    assert got.shape[0] == deg
+
+
+def test_submit_is_donation_safe_for_streaming(store_and_ids):
+    """``Plan.submit`` (the broker's no-sync path) must also preserve the
+    caller's buffers — the broker re-reads batch columns for decode."""
+    store, _ = store_and_ids
+    E = eng.Engine(store)
+    plan = E.compile(
+        ServeQ(unbounded=True),
+        ExecConfig(backend="jnp", cap=64, donate_batch=True),
+    )
+    qb = _device_batch(store, seed=2)
+    r = plan.submit(qb)
+    assert not any(a.is_deleted() for a in qb)
+    # the result is real device output, identical on a second submit
+    r2 = plan.submit(qb)
+    assert_results_identical(tuple(r), tuple(r2), "submit-twice")
+
+
+def test_sharded_config_never_donates(store_and_ids):
+    """Donation is single-device only: with a mesh, the executor's
+    ``_donates()`` is False no matter the flag (donating sharded inputs
+    would alias buffers across shards)."""
+    store, _ = store_and_ids
+    E = eng.Engine(store)
+    cfg = ExecConfig(backend="jnp", donate_batch=True)
+    assert cfg.mesh is None
+    ex = E.compile(ServeQ(unbounded=False), cfg)._executor
+    assert ex._donates() is True
+    if len(jax.devices()) == 1:
+        pytest.skip("needs >1 device to build a mesh config")
+    mesh = jax.make_mesh((len(jax.devices()), 1), ("data", "model"))
+    cfg_sh = ExecConfig(backend="jnp", donate_batch=True, mesh=mesh)
+    ex_sh = E.compile(ServeQ(unbounded=False), cfg_sh)._executor
+    assert ex_sh._donates() is False

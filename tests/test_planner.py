@@ -115,6 +115,56 @@ def test_dp_beats_greedy_on_trap(trap_store):
     assert rows(a) == rows(b) and a.n > 0
 
 
+@pytest.fixture(scope="module")
+def pricing_store():
+    """Crafted nnz profile for the lane-pricing flip: p1 holds 8 pairs,
+    p2 holds 60 pairs over 10 subjects x 10 objects."""
+    ids = [(s, 1, s) for s in range(1, 9)]
+    ids += [(s, 2, o) for s in range(1, 11) for o in range(1, 7)]
+    return _store_from_triples(ids, n_subjects=10, n_objects=10, n_preds=2)
+
+
+def test_lane_pricing_flips_order(pricing_store):
+    """Uniform lane pricing picks the WRONG order here: pattern B
+    ((?x, 2, o)) is the more selective stand-alone scan, but once ?x is
+    bound B becomes a check-shaped step — cheap per lane — so running
+    the bigger scan A first and sweeping B as 8 check lanes is cheaper
+    than scanning B first and expanding A over its 6 rows."""
+    A = TriplePattern("?x", 1, "?y")
+    B = TriplePattern("?x", 2, 3)
+    pats = [A, B]
+    # lane classification: B is a check once ?x carries values, A never is
+    assert planner.step_lane_price(B, {"?x"}) == planner.LANE_PRICE_CHECK
+    assert planner.step_lane_price(B, set()) == planner.LANE_PRICE_SCAN
+    assert planner.step_lane_price(A, {"?x"}) == planner.LANE_PRICE_SCAN
+    # ?p-free check shapes price as checks too (the OP_CHECK branch)
+    assert (
+        planner.step_lane_price(TriplePattern(4, "?p", 3), set())
+        == planner.LANE_PRICE_CHECK
+    )
+    priced = planner.cost_order(pricing_store, pats)
+    uniform = planner.cost_order(pricing_store, pats, lane_pricing=False)
+    assert priced == [0, 1] and uniform == [1, 0]
+    # each search minimizes ITS OWN objective...
+    assert planner.order_cost(pricing_store, pats, priced) < planner.order_cost(
+        pricing_store, pats, uniform
+    )
+    assert planner.order_cost(
+        pricing_store, pats, uniform, lane_pricing=False
+    ) < planner.order_cost(pricing_store, pats, priced, lane_pricing=False)
+    # ...and both orders compute identical answers on identical machinery
+    a = planner.execute(pricing_store, algebra.bgp(pats), cap=256, exec_="jnp")
+    b = planner.execute(
+        pricing_store, algebra.bgp(pats), cap=256, exec_="jnp",
+        order_override=uniform,
+    )
+    key = sorted(a.cols)
+    rows = lambda t: set(
+        map(tuple, np.stack([t.cols[k] for k in key], axis=1).tolist())
+    )
+    assert rows(a) == rows(b) and a.n > 0
+
+
 def test_cost_order_never_worse_than_greedy(rdf_store):
     """Model-level dominance: on random pattern sets the DP's modelled
     cost is <= greedy's (it searches a superset of greedy's orders)."""

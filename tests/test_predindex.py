@@ -113,17 +113,20 @@ def _sample_keys(store, T, rng, n):
     return np.array(keys, np.int64), np.array(axes, np.int32)
 
 
+@pytest.mark.parametrize("layout", ["dac", "fixed"])
 @pytest.mark.parametrize("backend", ["pallas", "jnp"])
-def test_pruned_scan_vs_sweep_vs_truth(combined, backend):
-    """The acceptance gate: pruned == all-preds sweep == dense truth."""
+def test_pruned_scan_vs_sweep_vs_truth(combined, backend, layout):
+    """The acceptance gate: pruned == all-preds sweep == dense truth,
+    identically under both on-device index layouts."""
     store, T, ids = combined
     bi = store.pred_index
+    dev, pmeta = bi.select(layout)
     cap = 32
     rng = np.random.default_rng(2)
     keys, axes = _sample_keys(store, T, rng, 16)
     r = predindex.scan_pruned_batch(
-        store.meta, store.forest, bi.meta, bi.device, keys - 1, axes, cap,
-        bi.meta.max_degree, backend,
+        store.meta, store.forest, pmeta, dev, keys - 1, axes, cap,
+        pmeta.max_degree, backend,
     )
     # the sweep reference: every predicate, broadcast keys, ONE launch
     P = store.n_preds
@@ -163,10 +166,12 @@ def test_pruned_scan_vs_sweep_vs_truth(combined, backend):
                 assert exp_sweep == [], (i, p)  # non-candidates are empty
 
 
+@pytest.mark.parametrize("layout", ["dac", "fixed"])
 @pytest.mark.parametrize("backend", ["pallas", "jnp"])
-def test_pruned_check_vs_all_preds(combined, backend):
+def test_pruned_check_vs_all_preds(combined, backend, layout):
     store, T, ids = combined
     bi = store.pred_index
+    dev, pmeta = bi.select(layout)
     rng = np.random.default_rng(3)
     # pairs from real triples (hits guaranteed), plus misses
     picks = ids[rng.integers(0, ids.shape[0], 24)]
@@ -174,8 +179,8 @@ def test_pruned_check_vs_all_preds(combined, backend):
     o_arr = picks[:, 2].copy()
     o_arr[::3] = rng.integers(1, store.n_objects + 1, len(o_arr[::3]))  # misses
     r = predindex.check_pruned_batch(
-        store.meta, store.forest, bi.meta, bi.device, s_arr - 1, o_arr - 1,
-        bi.meta.max_degree, backend,
+        store.meta, store.forest, pmeta, dev, s_arr - 1, o_arr - 1,
+        pmeta.max_degree, backend,
     )
     for i in range(len(s_arr)):
         allp = np.asarray(
@@ -209,12 +214,21 @@ def test_unified_serve_pruned_equals_fallback(combined, backend):
         o=jnp.asarray(picks[:, 2], jnp.int32),
     )
     cap = 32
-    pruned = eng.make_serve_step(store.meta, cap, backend=backend, pmeta=bi.meta)
+    results = {}
+    for layout in ("dac", "fixed"):
+        dev, pmeta = bi.select(layout)
+        pruned = eng.make_serve_step(
+            store.meta, cap, backend=backend, pmeta=pmeta
+        )
+        results[layout] = pruned(store.forest, q, dev)
     fallback = eng.make_serve_step(
         store.meta, cap, backend=backend, u_width=store.n_preds
     )
-    r1 = pruned(store.forest, q, bi.device)
+    r1 = results["dac"]
     r2 = fallback(store.forest, q)
+    # the two pruned layouts are bit-identical on EVERY output field
+    for a, b in zip(results["dac"], results["fixed"]):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
     hit1, hit2 = np.asarray(r1.hit), np.asarray(r2.hit)
     for i in range(B):
         assert hit1[i] == hit2[i], i
