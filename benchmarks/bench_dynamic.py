@@ -1,0 +1,194 @@
+"""Dynamic-store churn benchmark: what the LSM delta layer costs.
+
+Three numbers the EXPERIMENTS.md "Dynamic store" section reads off:
+
+  * **sustained insert qps** — single-writer ``DynamicStore.insert``
+    throughput (a host-side set op; no device work on the write path);
+  * **read p50/p99 at 0 / 5 / 20 % delta fraction** — mixed CHECK/ROW/COL
+    serve batches through a compiled plan while that fraction of the
+    static triple count sits in the delta (half fresh inserts, half
+    tombstones).  The 0 % row doubles as the read-path overhead probe:
+    an empty delta must serve at static-store latency (the acceptance
+    bound is <= 1.15x the pure-static p50, reported alongside);
+  * **compaction pause** — wall-clock to fold the 20 % delta down
+    (device dump -> rebuild -> epoch swap) plus the base-plan recompile
+    at the new epoch.  The broker runs both off the serve path; the
+    pause is what a single-threaded caller would block.
+
+    PYTHONPATH=src python -m benchmarks.bench_dynamic [--fast]
+        [--backend pallas|jnp] [--json OUT.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.core import compaction, delta, k2triples
+from repro.core import engine as eng
+from repro.core.query import ExecConfig, ServeQ
+from repro.data import rdf
+
+CSV_HEADER = "backend,delta_frac,delta_triples,tombstones,p50_ms,p99_ms"
+
+_FAST = dict(n_triples=10_000, n_preds=16, cap=256, batch=64,
+             reps=40, warmup=5, n_writes=2_000)
+_FULL = dict(n_triples=60_000, n_preds=32, cap=1024, batch=256,
+             reps=80, warmup=10, n_writes=10_000)
+
+_FRACS = (0.0, 0.05, 0.20)
+
+
+def _mixed_batch(ds, n, seed=3):
+    rng = np.random.default_rng(seed)
+    ops = rng.integers(0, 3, n).astype(np.int32)  # CHECK / ROW / COL
+    rows = ds.ids[rng.integers(0, ds.n_triples, n)]
+    s = np.where(ops != eng.OP_COL, rows[:, 0], 0).astype(np.int32)
+    p = rows[:, 1].astype(np.int32)
+    o = np.where(ops != eng.OP_ROW, rows[:, 2], 0).astype(np.int32)
+    return eng.ServeBatch(op=ops, s=s, p=p, o=o)
+
+
+def _churn(store, ds, n, seed):
+    """Half tombstones of static triples, half fresh inserts (including
+    appended-range entity ids the static store never saw)."""
+    rng = np.random.default_rng(seed)
+    kill = ds.ids[rng.choice(ds.n_triples, n // 2, replace=False)]
+    for s, p, o in kill:
+        store.delete(int(s), int(p), int(o))
+    E = max(ds.n_subjects, ds.n_objects)
+    for _ in range(n - n // 2):
+        store.insert(
+            int(rng.integers(1, E + 3)),
+            int(rng.integers(1, ds.n_preds + 1)),
+            int(rng.integers(1, E + 3)),
+        )
+
+
+def _read_tails(engine, cfg, qb, reps, warmup):
+    plan = engine.compile(ServeQ(unbounded=False), cfg)
+    for _ in range(warmup):
+        plan(qb)
+    lat = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        plan(qb)
+        lat.append((time.perf_counter() - t0) * 1e3)
+    a = np.asarray(lat)
+    return float(np.percentile(a, 50)), float(np.percentile(a, 99))
+
+
+def run(*, fast: bool = False, backend: str | None = None) -> dict:
+    kw = _FAST if fast else _FULL
+    cfg = ExecConfig(cap=kw["cap"], **(
+        {"backend": backend} if backend else {}
+    ))
+    ds = rdf.generate_like("dbtune", kw["n_triples"], seed=5)
+    static = k2triples.from_id_triples(
+        ds.ids, n_so=ds.n_so, n_subjects=ds.n_subjects,
+        n_objects=ds.n_objects, n_preds=ds.n_preds,
+    )
+    qb = _mixed_batch(ds, kw["batch"])
+
+    # pure-static reference p50 (the <= 1.15x acceptance denominator)
+    static_p50, _ = _read_tails(
+        eng.Engine(store=static), cfg, qb, kw["reps"], kw["warmup"]
+    )
+
+    # sustained single-writer insert qps (host-side set ops)
+    store = delta.DynamicStore(static)
+    rng = np.random.default_rng(7)
+    E = max(ds.n_subjects, ds.n_objects)
+    trips = rng.integers(
+        1, [E + 1, ds.n_preds + 1, E + 1], size=(kw["n_writes"], 3)
+    )
+    t0 = time.perf_counter()
+    for s, p, o in trips:
+        store.insert(int(s), int(p), int(o))
+    insert_qps = kw["n_writes"] / (time.perf_counter() - t0)
+
+    reads = []
+    for frac in _FRACS:
+        store = delta.DynamicStore(static)
+        n_delta = int(frac * ds.n_triples)
+        if n_delta:
+            _churn(store, ds, n_delta, seed=int(frac * 100))
+        engine = eng.Engine(store=store)
+        p50, p99 = _read_tails(engine, cfg, qb, kw["reps"], kw["warmup"])
+        reads.append({
+            "delta_frac": frac,
+            "delta_triples": store.delta.n_inserts,
+            "tombstones": store.delta.n_tombstones,
+            "p50_ms": p50,
+            "p99_ms": p99,
+        })
+
+    # compaction pause on the 20% store: rebuild + base-plan recompile
+    engine = eng.Engine(store=store)
+    engine.compile(ServeQ(unbounded=False), cfg)(qb)  # warm epoch-0 plan
+    t0 = time.perf_counter()
+    rep = compaction.compact(store, backend=cfg.backend)
+    t1 = time.perf_counter()
+    engine.compile(ServeQ(unbounded=False), cfg)(qb)  # epoch-1 recompile
+    t2 = time.perf_counter()
+
+    return {
+        "backend": cfg.backend,
+        "n_triples": int(ds.n_triples),
+        "insert_qps": insert_qps,
+        "static_p50_ms": static_p50,
+        "overhead_x": reads[0]["p50_ms"] / static_p50 if static_p50 else None,
+        "read": reads,
+        "compaction": {
+            "rebuild_ms": (t1 - t0) * 1e3,
+            "recompile_ms": (t2 - t1) * 1e3,
+            "pause_ms": (t2 - t0) * 1e3,
+            "n_triples": rep.n_triples,
+            "delta_merged": rep.delta_merged,
+            "tombstones_applied": rep.tombstones_applied,
+        },
+    }
+
+
+def format_rows(res: dict) -> list[str]:
+    out = [
+        f"{res['backend']},{r['delta_frac']:.2f},{r['delta_triples']},"
+        f"{r['tombstones']},{r['p50_ms']:.2f},{r['p99_ms']:.2f}"
+        for r in res["read"]
+    ]
+    c = res["compaction"]
+    out.append(
+        f"# insert_qps={res['insert_qps']:.0f} "
+        f"static_p50_ms={res['static_p50_ms']:.2f} "
+        f"overhead_x={res['overhead_x']:.3f}"
+    )
+    out.append(
+        f"# compaction pause_ms={c['pause_ms']:.0f} "
+        f"(rebuild={c['rebuild_ms']:.0f} recompile={c['recompile_ms']:.0f}) "
+        f"triples={c['n_triples']} merged={c['delta_merged']} "
+        f"tombstoned={c['tombstones_applied']}"
+    )
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--backend", default=None, choices=("pallas", "jnp"))
+    ap.add_argument("--json", metavar="PATH", default=None)
+    args = ap.parse_args()
+    res = run(fast=args.fast, backend=args.backend)
+    print(CSV_HEADER)
+    for line in format_rows(res):
+        print(line)
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(res, fh, indent=2, default=float)
+        print(f"# wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

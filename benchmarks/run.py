@@ -54,8 +54,8 @@ def main() -> None:
     from repro import obs
 
     from benchmarks import (
-        bench_compression, bench_joins, bench_kernels, bench_patterns,
-        bench_queries, bench_serve,
+        bench_compression, bench_dynamic, bench_joins, bench_kernels,
+        bench_patterns, bench_queries, bench_serve,
     )
 
     tracer = metrics = None
@@ -124,6 +124,15 @@ def main() -> None:
     for r in srows:
         print(bench_serve.format_row(r))
     results["serving"] = srows
+
+    print("=" * 72)
+    print("# Dynamic store: churn (insert qps, read tails vs delta "
+          "fraction, compaction pause)")
+    print(bench_dynamic.CSV_HEADER)
+    dyn_res = bench_dynamic.run(fast=args.fast)
+    for line in bench_dynamic.format_rows(dyn_res):
+        print(line)
+    results["dynamic"] = dyn_res
 
     print("=" * 72)
     print("# Query planner: cost-ordered vs greedy vs worst join orders")

@@ -1,0 +1,152 @@
+"""Background compaction: fold the delta into a rebuilt static store.
+
+The LSM contract's second half: when the delta grows past
+:class:`CompactionPolicy` thresholds, dump the static store's ID triples off
+the device (``patterns.dump`` — no retained source triples, the forest IS
+the store), apply tombstones, union the inserts, and rebuild forest + DAC
+predicate index + dictionary extents with ``k2triples.from_id_triples``.
+The rebuild runs off the serve path (the broker does it in a worker
+thread); ``DynamicStore.swap`` then installs the new epoch atomically while
+in-flight plans keep serving the old one — mutations that raced in after
+the pinned snapshot survive in the rebased delta.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core import patterns
+from repro.core.delta import DeltaSnapshot, DynamicStore
+from repro.core.k2triples import K2TriplesStore, from_id_triples
+
+
+@dataclasses.dataclass(frozen=True)
+class CompactionPolicy:
+    """When to fold the delta down.
+
+    ``max_delta``: compact once inserts + tombstones exceed this many
+    entries.  ``max_tombstone_frac``: compact once tombstones exceed this
+    fraction of the static triple count (but only after
+    ``min_tombstones`` — tiny stores shouldn't churn).
+    """
+
+    max_delta: int = 4096
+    max_tombstone_frac: float = 0.2
+    min_tombstones: int = 64
+
+    def __post_init__(self):
+        if self.max_delta < 1:
+            raise ValueError("max_delta must be >= 1")
+        if not (0.0 < self.max_tombstone_frac <= 1.0):
+            raise ValueError("max_tombstone_frac must be in (0, 1]")
+
+
+def needs_compaction(store: DynamicStore, policy: CompactionPolicy) -> bool:
+    d = store.delta
+    n_ins, n_tomb = d.n_inserts, d.n_tombstones
+    if n_ins + n_tomb >= policy.max_delta:
+        return True
+    n_static = max(store.static.n_triples, 1)
+    return (
+        n_tomb >= policy.min_tombstones
+        and n_tomb / n_static >= policy.max_tombstone_frac
+    )
+
+
+def dump_static_ids(static: K2TriplesStore, backend=None) -> np.ndarray:
+    """Recover int64[N, 3] 1-based (s, p, o) triples from the forest."""
+    if static.n_triples == 0:
+        return np.empty((0, 3), dtype=np.int64)
+    cap = max(int(np.asarray(static.forest.nnz).max()), 1)
+    r = patterns.dump(static.meta, static.forest, cap, backend)
+    rows = np.asarray(r.rows)
+    cols = np.asarray(r.cols)
+    valid = np.asarray(r.valid)
+    if bool(np.asarray(r.overflow).any()):  # cap == max nnz: cannot happen
+        raise RuntimeError("static dump overflowed its own nnz cap")
+    out = []
+    for pi in range(static.n_preds):
+        v = valid[pi]
+        if not v.any():
+            continue
+        ss, oo = rows[pi][v], cols[pi][v]
+        out.append(
+            np.stack([ss, np.full(ss.shape, pi + 1, dtype=np.int64), oo], axis=1)
+        )
+    if not out:
+        return np.empty((0, 3), dtype=np.int64)
+    return np.concatenate(out, axis=0).astype(np.int64)
+
+
+@dataclasses.dataclass(frozen=True)
+class CompactionReport:
+    epoch: int
+    n_triples: int
+    delta_merged: int
+    tombstones_applied: int
+    duration_s: float
+
+
+def compact(store: DynamicStore, *, backend=None) -> CompactionReport:
+    """Fold the current delta snapshot into a new static epoch.
+
+    Pins a :class:`DeltaSnapshot`, rebuilds off-path, then ``swap``s —
+    writes landing during the rebuild survive in the rebased delta.  The
+    dictionary (including any appended-range extension) is carried through
+    unchanged: ids never move across epochs.
+    """
+    t0 = time.perf_counter()
+    static = store.static
+    snap: DeltaSnapshot = store.delta.snapshot()
+
+    ids = dump_static_ids(static, backend)
+    applied = 0
+    if snap.n_tombstones and ids.shape[0]:
+        keep = np.ones(ids.shape[0], dtype=bool)
+        for p, pairs in snap.tomb.items():
+            sel = np.nonzero(ids[:, 1] == p)[0]
+            for j in sel:
+                if (int(ids[j, 0]), int(ids[j, 2])) in pairs:
+                    keep[j] = False
+                    applied += 1
+        ids = ids[keep]
+    if snap.n_inserts:
+        extra = [
+            (s, p, o)
+            for p, pairs in sorted(snap.ins.items())
+            for (s, o) in sorted(pairs)
+        ]
+        ids = np.concatenate(
+            [ids, np.asarray(extra, dtype=np.int64).reshape(-1, 3)], axis=0
+        )
+    if ids.shape[0]:
+        ids = np.unique(ids, axis=0)
+
+    d = store.dictionary
+    if d is not None:
+        n_subjects, n_objects, n_preds = d.n_subjects, d.n_objects, d.n_preds
+    else:
+        n_subjects = max(static.n_subjects, snap.n_subjects)
+        n_objects = max(static.n_objects, snap.n_objects)
+        n_preds = max(static.n_preds, snap.n_preds)
+
+    new_static = from_id_triples(
+        ids,
+        n_so=static.n_so,
+        n_subjects=n_subjects,
+        n_objects=n_objects,
+        n_preds=n_preds,
+        dictionary=static.dictionary,
+        with_pred_index=static.pred_index is not None,
+    )
+    epoch = store.swap(new_static, snap)
+    return CompactionReport(
+        epoch=epoch,
+        n_triples=int(ids.shape[0]),
+        delta_merged=snap.n_inserts,
+        tombstones_applied=applied,
+        duration_s=time.perf_counter() - t0,
+    )

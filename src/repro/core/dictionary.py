@@ -476,3 +476,142 @@ def build_compressed_dictionary(
         o=FrontCodedStrings(sorted(objects - so), bucket),
         p=FrontCodedStrings(sorted(preds), bucket),
     )
+
+
+class ExtendedDictionary:
+    """Incremental id-range extension on top of a frozen dictionary.
+
+    The delta layer (``core/delta.py``) must mint ids for terms the static
+    dictionary has never seen without perturbing any existing id — the
+    static k²-forest and DAC index are addressed by those ids.  Extension
+    terms therefore get a single SHARED subject/object id appended above
+    ``base.matrix_extent`` (id ``ext_base + k``, 1-based ``k``), and
+    extension predicates are appended above ``base.n_preds``.  Compaction
+    folds the extension into the rebuilt store by passing the same
+    ``ExtendedDictionary`` through — appended ranges keep ids stable across
+    epochs, so plans and cached results never need re-translation.
+
+    Duck-compatible with :class:`TripleDictionary` /
+    :class:`CompressedTripleDictionary` (``encode_*`` raise ``KeyError`` on
+    unknown terms; ``decode_*`` cover both base and extension ranges).
+    """
+
+    def __init__(self, base: TripleDictionary | CompressedTripleDictionary):
+        self.base = base
+        self.ext_base = base.matrix_extent
+        self.pred_base = base.n_preds
+        self._terms: list[str] = []  # shared S/O extension pool
+        self._ids: dict[str, int] = {}
+        self._preds: list[str] = []
+        self._pred_ids: dict[str, int] = {}
+
+    # --- extents (appended ranges inflate both roles: harmless empty rows)
+
+    @property
+    def n_so(self) -> int:
+        return self.base.n_so
+
+    @property
+    def n_subjects(self) -> int:
+        return self.ext_base + len(self._terms) if self._terms else self.base.n_subjects
+
+    @property
+    def n_objects(self) -> int:
+        return self.ext_base + len(self._terms) if self._terms else self.base.n_objects
+
+    @property
+    def n_preds(self) -> int:
+        return self.pred_base + len(self._preds)
+
+    @property
+    def matrix_extent(self) -> int:
+        return max(self.ext_base + len(self._terms), 1)
+
+    @property
+    def n_ext_terms(self) -> int:
+        return len(self._terms)
+
+    # --- encode (base first, then the extension pool)
+
+    def _encode_ext(self, term: str) -> int:
+        i = self._ids.get(term)
+        if i is None:
+            raise KeyError(term)
+        return i
+
+    def encode_subject(self, term: str) -> int:
+        try:
+            return self.base.encode_subject(term)
+        except KeyError:
+            return self._encode_ext(term)
+
+    def encode_object(self, term: str) -> int:
+        try:
+            return self.base.encode_object(term)
+        except KeyError:
+            return self._encode_ext(term)
+
+    def encode_predicate(self, term: str) -> int:
+        try:
+            return self.base.encode_predicate(term)
+        except KeyError:
+            i = self._pred_ids.get(term)
+            if i is None:
+                raise KeyError(term)
+            return i
+
+    # --- extend (idempotent: re-adding returns the existing id)
+
+    def add_term(self, term: str) -> int:
+        """Register ``term`` in the shared S/O extension pool -> its id."""
+        for enc in (self.base.encode_subject, self.base.encode_object):
+            try:
+                return enc(term)
+            except KeyError:
+                pass
+        i = self._ids.get(term)
+        if i is None:
+            i = self.ext_base + len(self._terms) + 1
+            self._terms.append(term)
+            self._ids[term] = i
+        return i
+
+    def add_predicate(self, term: str) -> int:
+        try:
+            return self.base.encode_predicate(term)
+        except KeyError:
+            i = self._pred_ids.get(term)
+            if i is None:
+                i = self.pred_base + len(self._preds) + 1
+                self._preds.append(term)
+                self._pred_ids[term] = i
+            return i
+
+    # --- decode
+
+    def _decode_ext(self, xid: int) -> str:
+        return self._terms[xid - self.ext_base - 1]
+
+    def decode_subject(self, sid: int) -> str:
+        if sid > self.ext_base:
+            return self._decode_ext(sid)
+        return self.base.decode_subject(sid)
+
+    def decode_object(self, oid: int) -> str:
+        if oid > self.ext_base:
+            return self._decode_ext(oid)
+        return self.base.decode_object(oid)
+
+    def decode_predicate(self, pid: int) -> str:
+        if pid > self.pred_base:
+            return self._preds[pid - self.pred_base - 1]
+        return self.base.decode_predicate(pid)
+
+    def encode_triples(
+        self, triples: Iterable[tuple[str, str, str]]
+    ) -> np.ndarray:
+        out = [
+            (self.encode_subject(s), self.encode_predicate(p), self.encode_object(o))
+            for (s, p, o) in triples
+        ]
+        return np.asarray(out, dtype=np.int64).reshape(-1, 3)

@@ -60,6 +60,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import obs
 from repro.compat import shard_map
+from repro.core import delta as dyn
 from repro.core import joins, k2forest, patterns, predindex, query as qapi
 from repro.obs import cost as obs_cost
 from repro.core.k2forest import K2Forest
@@ -595,8 +596,13 @@ class _ExecBase:
         self.cfg = cfg
         self.cap = cfg.cap
         self.cap_y = cfg.cap_y
+        # the store epoch this executor was compiled against — a dynamic
+        # store bumps it on compaction swap, and running a stale executor
+        # would silently serve dropped triples from the old forest
+        self.epoch = engine.store_epoch
 
     def _grow(self, fn):
+        self.engine._check_epoch(self.epoch)
         t, m = obs.STATE.tracer, obs.STATE.metrics
         if t is not None or m is not None:
             inner = fn
@@ -749,18 +755,55 @@ class _PatternExec(_ExecBase):
 
     def _run_pairs(self, p, b, cap):
         eng = self.engine
-        r = k2forest.range_scan_batch(
-            eng.meta, eng.forest, jnp.asarray(p - 1, jnp.int32), cap, self.cfg
-        )
-        self._overflow_guard(r)
-        rows, cols, valid = (np.asarray(a) for a in (r.rows, r.cols, r.valid))
-        return [
-            np.stack([rows[i][valid[i]] + 1, cols[i][valid[i]] + 1], axis=1)
-            for i in range(b)
-        ]
+        view = eng.dynamic_view()
+        if view is None:
+            r = k2forest.range_scan_batch(
+                eng.meta, eng.forest, jnp.asarray(p - 1, jnp.int32), cap,
+                self.cfg,
+            )
+            self._overflow_guard(r)
+            rows, cols, valid = (
+                np.asarray(a) for a in (r.rows, r.cols, r.valid)
+            )
+            return [
+                np.stack(
+                    [rows[i][valid[i]] + 1, cols[i][valid[i]] + 1], axis=1
+                )
+                for i in range(b)
+            ]
+        # dynamic: delta-only preds (beyond the static forest) are clamped
+        # to a safe tree for dispatch and answered purely from the snapshot
+        p = np.asarray(p, np.int64).reshape(-1)
+        safe = p <= view.preds_static
+        empty = np.empty(0, np.int64)
+        if safe.any():
+            p_run = np.where(safe, p, 1)
+            r = k2forest.range_scan_batch(
+                eng.meta, eng.forest, jnp.asarray(p_run - 1, jnp.int32),
+                cap, self.cfg,
+            )
+            if bool((np.asarray(r.overflow) & safe).any()):
+                raise CapOverflow(
+                    "result lane truncated at cap; CapPolicy(grow=True) "
+                    "doubles"
+                )
+            rows, cols, valid = (
+                np.asarray(a) for a in (r.rows, r.cols, r.valid)
+            )
+        out = []
+        for i in range(b):
+            if safe[i]:
+                ss = rows[i][valid[i]].astype(np.int64) + 1
+                oo = cols[i][valid[i]].astype(np.int64) + 1
+            else:
+                ss, oo = empty, empty
+            ss, oo = view.snap.merge_pairs(int(p[i]), ss, oo)
+            out.append(np.stack([ss, oo], axis=1).reshape(-1, 2))
+        return out
 
     def _run_dump(self, cap):
         eng = self.engine
+        view = eng.dynamic_view()
         r = patterns.dump(eng.meta, eng.forest, cap, self.cfg)
         self._overflow_guard(r)
         rows, cols, valid = (np.asarray(a) for a in (r.rows, r.cols, r.valid))
@@ -770,6 +813,19 @@ class _PatternExec(_ExecBase):
                 out[pi + 1] = np.stack(
                     [rows[pi][valid[pi]], cols[pi][valid[pi]]], axis=1
                 )
+        if view is not None:
+            merged = {}
+            empty = np.empty(0, np.int64)
+            for p in range(1, view.total_preds + 1):
+                pairs = out.get(p)
+                ss = pairs[:, 0].astype(np.int64) if pairs is not None else empty
+                oo = pairs[:, 1].astype(np.int64) if pairs is not None else empty
+                ss, oo = view.snap.merge_pairs(p, ss, oo)
+                if len(ss):
+                    merged[p] = np.stack(
+                        [np.asarray(ss), np.asarray(oo)], axis=1
+                    )
+            out = merged
         return [out]
 
 
@@ -799,7 +855,10 @@ class _JoinExec(_ExecBase):
 
     def _run_abc(self, q, cap):
         eng, cfg = self.engine, self.cfg
-        Pn = eng.store.n_preds
+        # the B/C per-pred side-list enumerations must cover delta-only
+        # appended predicates too; those lanes are sanitized to dead on the
+        # device and answered from the snapshot in the merge
+        Pn = dyn.total_preds(eng.store)
         if q.category == "A":
             lanes = [
                 self._lane(q.vpos1, q.p1, q.c1),
@@ -846,6 +905,13 @@ class _JoinExec(_ExecBase):
 
     def _run_def(self, q, cap, cap_y):
         eng, cfg = self.engine, self.cfg
+        view = eng.dynamic_view()
+        if view is not None:
+            # the fused scan->rebind kernels read only the static forest;
+            # with a live delta the join decomposes into two serve-lane
+            # stages (X side list, then per-x rebind) so every stage rides
+            # the sanitize+merge path
+            return self._run_def_dynamic(q, cap, cap_y)
         m, f = eng.meta, eng.forest
         if q.category == "D":
             r = joins.join_d(
@@ -866,6 +932,58 @@ class _JoinExec(_ExecBase):
             )
         self._overflow_guard(r)
         return _pairs_to_dict_pred(r)
+
+    def _run_def_dynamic(self, q, cap, cap_y):
+        eng, cfg = self.engine, self.cfg
+        pe = _PatternExec(eng, cfg)
+        # stage 1: the shared-variable side list X
+        if q.category in ("D", "E"):
+            lane = np.asarray([self._lane(q.vpos1, q.p1, q.c1)], np.int64)
+            r = eng._run_lanes(
+                cfg, cap, lane[:, 0], lane[:, 1], lane[:, 2], lane[:, 3]
+            )
+            self._overflow_guard(r)
+            xs = np.asarray(r.ids[0])[np.asarray(r.valid[0])].astype(np.int64)
+        else:  # F: ?X linked to c1 by ANY predicate — unbounded lane, union
+            op1 = OP_ANY_ANY_O if q.vpos1 == "s" else OP_S_ANY_ANY
+            key = np.asarray([q.c1], np.int64)
+            zero = np.zeros(1, np.int64)
+            s1, o1 = (zero, key) if q.vpos1 == "s" else (key, zero)
+            per = pe._run_serve(op1, s1, zero, o1, 1, cap)[0]
+            xs = (
+                np.unique(np.concatenate([np.asarray(v) for v in per.values()]))
+                .astype(np.int64)
+                if per else np.empty(0, np.int64)
+            )
+        if not xs.size:
+            return {}
+        # stage 2: rebind each x
+        if q.category == "D":
+            if q.vpos2 == "s":
+                ops2 = np.full(xs.size, OP_ROW, np.int32)
+                s2, o2 = xs, np.zeros(xs.size, np.int64)
+            else:
+                ops2 = np.full(xs.size, OP_COL, np.int32)
+                s2, o2 = np.zeros(xs.size, np.int64), xs
+            p2 = np.full(xs.size, q.p2, np.int64)
+            r2 = eng._run_lanes(cfg, cap_y, ops2, s2, p2, o2)
+            self._overflow_guard(r2)
+            ids, valid = np.asarray(r2.ids), np.asarray(r2.valid)
+            return {
+                int(x): ids[i][valid[i]]
+                for i, x in enumerate(xs)
+                if valid[i].any()
+            }
+        op2 = OP_S_ANY_ANY if q.vpos2 == "s" else OP_ANY_ANY_O
+        zero = np.zeros(xs.size, np.int64)
+        s2, o2 = (xs, zero) if q.vpos2 == "s" else (zero, xs)
+        per_x = pe._run_serve(op2, s2, zero, o2, xs.size, cap_y)
+        out: dict[int, dict[int, np.ndarray]] = {}
+        for i, x in enumerate(xs):
+            for pl, ys in per_x[i].items():
+                if len(ys):
+                    out.setdefault(int(pl), {})[int(x)] = np.asarray(ys)
+        return {p: d for p, d in sorted(out.items())}
 
 
 _ANON = algebra.ANON  # internal prefix for None (anonymous) BGP positions
@@ -964,17 +1082,31 @@ class _ServeExec(_ExecBase):
     def run(self, q: ServeQ, batch):
         batch = self._coerce(batch)
 
+        def one(cap):
+            view = self.engine.dynamic_view()
+            qb = batch if view is None else view.sanitize_batch(batch)
+            r = self._call(qb, cap, q.unbounded)
+            if view is not None:
+                # the delta merge needs host arrays anyway; fetch, fold the
+                # snapshot in (host-side widening means the delta itself can
+                # never trip the guard), keep static overflow bits
+                r = view.merge_lanes(
+                    batch.op, batch.s, batch.p, batch.o,
+                    host_result(r, unbounded=q.unbounded),
+                )
+            return r
+
         def fn(cap, _):
             t = obs.STATE.tracer
             if t is None:
-                r = self._call(batch, cap, q.unbounded)
+                r = one(cap)
                 self._overflow_guard(r)
                 return r
             with t.span("plan.call", cat="plan",
                         b=int(batch.op.shape[0]), cap=cap,
                         unbounded=q.unbounded):
                 with t.span("plan.dispatch", cat="plan"):
-                    r = self._call(batch, cap, q.unbounded)
+                    r = one(cap)
                 with t.span("plan.sync", cat="plan"):
                     self._overflow_guard(r)
             return r
@@ -986,7 +1118,13 @@ class _ServeExec(_ExecBase):
         sync — the overflow guard and any cap growth are the caller's job
         (``launch.broker`` handles both per tenant).  The executor's cap
         never grows through this path, so a shared base plan stays at its
-        configured geometry no matter what overflows ride through it."""
+        configured geometry no matter what overflows ride through it.
+
+        Dynamic stores: this is the STATIC lane only — the caller grabs
+        ``Engine.dynamic_view()`` at dispatch, sanitizes the batch, and
+        merges the snapshot into the fetched result itself (the broker
+        does all three)."""
+        self.engine._check_epoch(self.epoch)
         t = obs.STATE.tracer
         if t is None:
             return self._call(self._coerce(batch), self.cap, q.unbounded)
@@ -1108,10 +1246,33 @@ class Engine:
     _env_cfg: ExecConfig | None = dataclasses.field(
         default=None, repr=False, compare=False
     )
+    # store epoch the caches were built against; a DynamicStore bumps its
+    # epoch on compaction swap and the caches (plans, programs, sharded
+    # forests) all close over the old forest/meta, so they are dropped
+    # wholesale at the next compile
+    _built_epoch: int = dataclasses.field(default=-1, repr=False, compare=False)
 
     @property
     def meta(self) -> K2Meta:
         return self.store.meta
+
+    @property
+    def store_epoch(self) -> int:
+        """Compaction epoch of a dynamic store (0 for a static one)."""
+        return getattr(self.store, "epoch", 0)
+
+    def _check_epoch(self, epoch: int) -> None:
+        cur = self.store_epoch
+        if epoch != cur:
+            raise qapi.StaleEpoch(
+                f"plan compiled at store epoch {epoch}, store is now at "
+                f"{cur} (compacted); recompile"
+            )
+
+    def dynamic_view(self):
+        """The delta read view for this dispatch, or ``None`` when the
+        store is static (or the delta is empty) — the static fast path."""
+        return dyn.view_of(self.store)
 
     @property
     def forest(self) -> K2Forest:
@@ -1154,6 +1315,14 @@ class Engine:
         multi-tenant broker uses this to budget per-tenant recompiles.
         """
         cfg = (config or self.default_config).resolved()
+        cur = self.store_epoch
+        if self._built_epoch != cur:
+            # post-compaction: every cached executor/program closes over the
+            # old epoch's forest+meta — invalidate them all before compiling
+            self._plan_cache.clear()
+            self._programs.clear()
+            self._sharded.clear()
+            self._built_epoch = cur
         self._validate(q, cfg)
         key = (qapi.shape_key(q), cfg)
         t, m = obs.STATE.tracer, obs.STATE.metrics
@@ -1382,6 +1551,10 @@ class Engine:
         self, cfg: ExecConfig, cap: int, ops_a, s, p, o,
         *, b: int, n: int, u_width: int, with_index: bool,
     ) -> ServeResult:
+        view = self.dynamic_view()
+        ops_run = (
+            view.sanitize_ops(ops_a, s, p, o) if view is not None else ops_a
+        )
 
         def pad(a, fill):
             out = np.full(n, fill, np.int32)
@@ -1389,7 +1562,7 @@ class Engine:
             return out
 
         qb = ServeBatch(
-            op=jnp.asarray(pad(ops_a, -1)),
+            op=jnp.asarray(pad(ops_run, -1)),
             s=jnp.asarray(pad(s, 0)),
             p=jnp.asarray(pad(p, 0)),
             o=jnp.asarray(pad(o, 0)),
@@ -1403,7 +1576,13 @@ class Engine:
             r = fn(f, qb, None)
         else:
             r = fn(f, qb)
-        return jax.tree.map(lambda a: a[:b], r)
+        r = jax.tree.map(lambda a: a[:b], r)
+        if view is not None:
+            # the delta lane: fold the snapshot into the static results on
+            # the host — subtract tombstones, union inserts, widen caps so
+            # the delta can never cause a false overflow
+            r = view.merge_lanes(ops_a, s, p, o, jax.tree.map(np.asarray, r))
+        return r
 
     def _lanes_runner(self, cfg: ExecConfig, cap: int):
         """Bound-pred serve-lane callable handed to the BGP optimizer."""

@@ -46,6 +46,7 @@ import numpy as np
 
 from repro import obs
 from repro.core import algebra, k2forest
+from repro.core import delta as dyn
 from repro.core.algebra import Table, TriplePattern
 from repro.core.k2triples import K2TriplesStore
 from repro.core.query import CapOverflow, ExecConfig
@@ -295,7 +296,7 @@ def _ragged_candidates(store: K2TriplesStore, keys: np.ndarray, axis: int):
     bi = store.pred_index
     if bi is None:  # index-free fallback: every predicate for every row
         n_rows = keys.shape[0]
-        P = store.n_preds
+        P = dyn.total_preds(store)
         return (
             np.repeat(np.arange(n_rows), P),
             np.tile(np.arange(P, dtype=np.int64), n_rows),
@@ -308,7 +309,26 @@ def _ragged_candidates(store: K2TriplesStore, keys: np.ndarray, axis: int):
     start = np.where(in_range, offs[rows], 0)
     deg = np.where(in_range, offs[rows + 1] - offs[rows], 0)
     row_idx, elem = _ragged_take(start, deg)
-    return row_idx, bi.host_preds[elem].astype(np.int64)
+    cand = bi.host_preds[elem].astype(np.int64)
+    snap = dyn.snapshot_of(store)
+    if snap is not None:
+        # the static SP/OP index knows nothing about recent inserts: union
+        # each row's delta predicates from the snapshot's per-entity bitmap
+        pm = snap.s_preds if axis == 0 else snap.o_preds
+        extra_r: list[int] = []
+        extra_c: list[np.ndarray] = []
+        for i, k in enumerate(np.asarray(keys).tolist()):
+            ps = pm.preds_of(int(k))
+            if ps.size:
+                extra_r.extend([i] * ps.size)
+                extra_c.append(ps - 1)  # candidates are 0-based
+        if extra_r:
+            row_idx = np.concatenate([row_idx, np.asarray(extra_r)])
+            cand = np.concatenate([cand, np.concatenate(extra_c)])
+            big = np.int64(dyn.total_preds(store) + 1)
+            uk = np.unique(row_idx * big + cand)  # dedup, (row, cand) order
+            row_idx, cand = uk // big, uk % big
+    return row_idx, cand
 
 
 def _resolve_with_bindings(
@@ -335,6 +355,12 @@ def _resolve_with_bindings(
     every-predicate fallback.
     """
     meta, f = store.meta, store.forest
+    view = dyn.view_of(store)
+    if view is not None and serve is None:
+        # no pooled engine runner handed in: synthesize a raw-launch runner
+        # so the delta sanitize+merge still wraps every check/scan lane
+        serve = _dyn_raw_runner(store, view, cap, backend)
+    P_tot = dyn.total_preds(store)
     n_rows = len(next(iter(bindings.values()))) if bindings else 1
     pvar = _is_var(pat.p)
 
@@ -394,7 +420,7 @@ def _resolve_with_bindings(
         else:
             row_idx, cand = np.arange(n_rows), p_arr - 1
         # a binding value re-used in predicate position may be out of range
-        ok = (cand >= 0) & (cand < store.n_preds)
+        ok = (cand >= 0) & (cand < P_tot)
         if serve is not None:
             from repro.core import engine as _eng
 
@@ -426,7 +452,7 @@ def _resolve_with_bindings(
         if row_idx.size == 0:  # no candidates anywhere: empty result
             emit(row_idx, [])
             return finish()
-        ok = (cand >= 0) & (cand < store.n_preds)
+        ok = (cand >= 0) & (cand < P_tot)
         if serve is not None:
             from repro.core import engine as _eng
 
@@ -461,19 +487,53 @@ def _resolve_with_bindings(
     # neither s nor o realized: enumerate candidate triples by range scan
     # and cross-product with the binding rows (cartesian steps land here)
     upreds = (
-        np.arange(1, store.n_preds + 1, dtype=np.int64)
+        np.arange(1, P_tot + 1, dtype=np.int64)
         if p_free
-        else np.unique(np.clip(p_arr, 1, store.n_preds))
+        else np.unique(np.clip(p_arr, 1, P_tot))
     )
-    pr = k2forest.range_scan_batch(meta, f, jnp.asarray(upreds - 1), cap, backend)
-    if bool(np.asarray(pr.overflow).any()):
-        raise CapOverflow("BGP pair enumeration truncated at cap")
-    pv = np.asarray(pr.valid)
-    prow, pcol = np.asarray(pr.rows) + 1, np.asarray(pr.cols) + 1
-    counts = pv.sum(axis=1)
-    pair_p = np.repeat(upreds, counts)
-    lanes, slots = np.nonzero(pv)
-    pair_s, pair_o = prow[lanes, slots], pcol[lanes, slots]
+    if view is None:
+        pr = k2forest.range_scan_batch(
+            meta, f, jnp.asarray(upreds - 1), cap, backend
+        )
+        if bool(np.asarray(pr.overflow).any()):
+            raise CapOverflow("BGP pair enumeration truncated at cap")
+        pv = np.asarray(pr.valid)
+        prow, pcol = np.asarray(pr.rows) + 1, np.asarray(pr.cols) + 1
+        counts = pv.sum(axis=1)
+        pair_p = np.repeat(upreds, counts)
+        lanes, slots = np.nonzero(pv)
+        pair_s, pair_o = prow[lanes, slots], pcol[lanes, slots]
+    else:
+        # dynamic: scan only the static trees, then merge each predicate's
+        # pair list through the snapshot — keeping pair_p grouped in
+        # ascending predicate order for the searchsorted below
+        sta = upreds[upreds <= view.preds_static]
+        per: dict[int, tuple[np.ndarray, np.ndarray]] = {}
+        if sta.size:
+            pr = k2forest.range_scan_batch(
+                meta, f, jnp.asarray(sta - 1), cap, backend
+            )
+            if bool(np.asarray(pr.overflow).any()):
+                raise CapOverflow("BGP pair enumeration truncated at cap")
+            pv = np.asarray(pr.valid)
+            prow, pcol = np.asarray(pr.rows) + 1, np.asarray(pr.cols) + 1
+            for i, p in enumerate(sta.tolist()):
+                per[p] = (
+                    prow[i][pv[i]].astype(np.int64),
+                    pcol[i][pv[i]].astype(np.int64),
+                )
+        empty = np.empty(0, np.int64)
+        pp, ps, po = [], [], []
+        for p in upreds.tolist():
+            ss, oo = per.get(p, (empty, empty))
+            ss, oo = view.snap.merge_pairs(int(p), ss, oo)
+            if len(ss):
+                pp.append(np.full(len(ss), p, np.int64))
+                ps.append(np.asarray(ss, np.int64))
+                po.append(np.asarray(oo, np.int64))
+        pair_p = np.concatenate(pp) if pp else empty
+        pair_s = np.concatenate(ps) if ps else empty
+        pair_o = np.concatenate(po) if po else empty
     if p_free:
         n_pairs = pair_p.shape[0]
         rows = np.repeat(np.arange(n_rows), n_pairs)
@@ -490,6 +550,14 @@ def _resolve_with_bindings(
 
 def _pattern_holds(store: K2TriplesStore, pat: TriplePattern) -> bool:
     """Ground (variable-free) pattern: does the triple exist?"""
+    snap = dyn.snapshot_of(store)
+    if snap is not None:
+        if snap.contains(pat.s, pat.p, pat.o):
+            return True
+        if snap.tomb_contains(pat.s, pat.p, pat.o):
+            return False
+        if pat.s > store.n_subjects or pat.o > store.n_objects:
+            return False  # appended-range id the static forest cannot hold
     if not (1 <= pat.p <= store.n_preds):
         return False
     return bool(
@@ -500,6 +568,65 @@ def _pattern_holds(store: K2TriplesStore, pat: TriplePattern) -> bool:
             )
         )[0]
     )
+
+
+def _dyn_raw_runner(store, view, cap: int, backend):
+    """Serve-shaped CHECK/ROW/COL lane runner over raw ``k2forest``
+    launches, wrapped in the delta sanitize+merge — the fallback used when
+    :func:`_resolve_with_bindings` is called on a dynamic store without a
+    pooled engine runner."""
+    from repro.core import engine as _eng
+
+    meta, f = store.meta, store.forest
+
+    def run(ops, s, p, o):
+        ops0 = np.asarray(ops, np.int32).reshape(-1)
+        s = np.asarray(s, np.int64).reshape(-1)
+        p = np.asarray(p, np.int64).reshape(-1)
+        o = np.asarray(o, np.int64).reshape(-1)
+        ops_r = view.sanitize_ops(ops0, s, p, o)
+        b = ops_r.shape[0]
+        hit = np.zeros(b, np.bool_)
+        ids = np.zeros((b, cap), np.int32)
+        valid = np.zeros((b, cap), np.bool_)
+        count = np.zeros(b, np.int32)
+        ovf = np.zeros(b, np.bool_)
+        is_chk = ops_r == _eng.OP_CHECK
+        if is_chk.any():
+            hh = np.asarray(
+                k2forest.check(
+                    meta, f,
+                    jnp.asarray(np.where(is_chk, p - 1, 0)),
+                    jnp.asarray(np.where(is_chk, s - 1, 0)),
+                    jnp.asarray(np.where(is_chk, o - 1, 0)),
+                )
+            )
+            hit = hh & is_chk
+        is_scan = (ops_r == _eng.OP_ROW) | (ops_r == _eng.OP_COL)
+        if is_scan.any():
+            axis = (ops_r == _eng.OP_COL).astype(np.int32)
+            key = np.where(axis == 1, o, s)
+            r = k2forest.scan_batch_mixed(
+                meta, f,
+                jnp.asarray(np.where(is_scan, p - 1, 0)),
+                jnp.asarray(np.where(is_scan, key - 1, 0)),
+                jnp.asarray(axis), cap, backend,
+            )
+            rv = np.asarray(r.valid) & is_scan[:, None]
+            ids = np.where(rv, np.asarray(r.ids) + 1, 0).astype(np.int32)
+            valid = rv
+            count = rv.sum(axis=1).astype(np.int32)
+            ovf = np.asarray(r.overflow) & is_scan
+        res = _eng.ServeResult(
+            hit=hit, ids=ids, valid=valid, count=count, overflow=ovf,
+            u_preds=np.zeros((b, 0), np.int32),
+            u_ids=np.zeros((b, 0, cap), np.int32),
+            u_valid=np.zeros((b, 0, cap), np.bool_),
+            u_count=np.zeros((b, 0), np.int32),
+        )
+        return view.merge_lanes(ops0, s, p, o, res)
+
+    return run
 
 
 # ---------------------------------------------------------------------------
@@ -593,6 +720,84 @@ def _run_block(
     return Table.from_bindings(bindings)
 
 
+def _conjuncts(expr) -> list:
+    """Flatten a top-level ``And`` chain into its conjunct list."""
+    if isinstance(expr, algebra.And):
+        return _conjuncts(expr.a) + _conjuncts(expr.b)
+    return [expr]
+
+
+def _conjoin(conjuncts: list):
+    out = conjuncts[0]
+    for c in conjuncts[1:]:
+        out = algebra.And(out, c)
+    return out
+
+
+def push_filters(node):
+    """Rewrite an algebra tree, pushing safe conjunctive FILTERs down.
+
+    Two rules, applied bottom-up until fixpoint:
+
+      * ``Filter(c, LeftJoin(a, b))`` -> ``LeftJoin(Filter(c, a), b)`` for
+        each conjunct ``c`` whose variables are all bound by ``a`` (the
+        required side).  Safe because an OPTIONAL match never changes the
+        left side's own columns — filtering before the join drops exactly
+        the rows the outer filter would have dropped, matched or not.
+      * ``Filter(c, Union(a, b))`` -> ``Union(Filter(c, a), Filter(c, b))``
+        for each conjunct scoped inside BOTH arms (conservative: a conjunct
+        mentioning a variable only one arm binds stays above the union).
+
+    Conjuncts that don't qualify stay in a residual filter above the node.
+    Pure rewrite — the differential tests check result equivalence.
+    """
+    if isinstance(node, algebra.Filter):
+        child = push_filters(node.child)
+        conjuncts = _conjuncts(node.expr)
+        if isinstance(child, algebra.LeftJoin):
+            lvars = algebra.node_vars(child.left)
+            down = [c for c in conjuncts if algebra.expr_vars(c) <= lvars]
+            stay = [c for c in conjuncts if not algebra.expr_vars(c) <= lvars]
+            if down:
+                child = algebra.LeftJoin(
+                    push_filters(algebra.Filter(_conjoin(down), child.left)),
+                    child.right,
+                )
+            return algebra.Filter(_conjoin(stay), child) if stay else child
+        if isinstance(child, algebra.Union):
+            avars = algebra.node_vars(child.left)
+            bvars = algebra.node_vars(child.right)
+            down = [
+                c for c in conjuncts
+                if algebra.expr_vars(c) <= avars
+                and algebra.expr_vars(c) <= bvars
+            ]
+            stay = [c for c in conjuncts if c not in down]
+            if down:
+                e = _conjoin(down)
+                child = algebra.Union(
+                    push_filters(algebra.Filter(e, child.left)),
+                    push_filters(algebra.Filter(e, child.right)),
+                )
+            return algebra.Filter(_conjoin(stay), child) if stay else child
+        return algebra.Filter(node.expr, child)
+    if isinstance(node, algebra.Join):
+        return algebra.Join(push_filters(node.left), push_filters(node.right))
+    if isinstance(node, algebra.LeftJoin):
+        return algebra.LeftJoin(
+            push_filters(node.left), push_filters(node.right)
+        )
+    if isinstance(node, algebra.Union):
+        return algebra.Union(push_filters(node.left), push_filters(node.right))
+    if isinstance(node, algebra.Project):
+        return algebra.Project(push_filters(node.child), node.vars)
+    if isinstance(node, algebra.Slice):
+        return algebra.Slice(
+            push_filters(node.child), node.order_by, node.limit, node.offset
+        )
+    return node
+
+
 def _seedable(left: Table, patterns) -> bool:
     """A block can consume ``left`` as SIP seed when every shared variable
     column is fully bound — an UNBOUND (0) value is a compat-join
@@ -621,6 +826,7 @@ def execute(
     benchmark hook).
     """
     kw = dict(cap=cap, exec_=exec_, serve=serve)
+    node = push_filters(node)
 
     def ev(n, override=None):
         if isinstance(n, (algebra.Scan, algebra.Join)):

@@ -465,6 +465,16 @@ def shape_key(query: Query):
 # ---------------------------------------------------------------------------
 
 
+class StaleEpoch(RuntimeError):
+    """A compiled plan outlived a compaction swap of its dynamic store.
+
+    Executors pin the store epoch they were compiled against; running one
+    after ``DynamicStore.swap`` would silently serve dropped triples from
+    the old forest, so the engine raises this instead.  ``Plan.__call__``
+    recompiles transparently; ``Plan.submit`` (the raw device path) lets it
+    propagate so the broker can refresh its base plan."""
+
+
 class Plan:
     """Compile-once / run-many handle returned by ``Engine.compile``.
 
@@ -486,7 +496,15 @@ class Plan:
         self._executor = executor
 
     def __call__(self, batch=None):
-        return self._executor.run(self.query, batch)
+        try:
+            return self._executor.run(self.query, batch)
+        except StaleEpoch:
+            # the store was compacted under us — recompile against the new
+            # epoch (ids are stable across swaps, so the query still means
+            # the same thing) and retry once
+            eng = self._executor.engine
+            self._executor = eng.compile(self.query, self.config)._executor
+            return self._executor.run(self.query, batch)
 
     def submit(self, batch=None):
         """Asynchronous dispatch: launch the compiled program and return its

@@ -54,6 +54,22 @@ dispatch order, lanes decode in lane order, and a tenant with a retried
 (overflowed) lane has its later lanes in that batch held until the retry
 lands — so growth never reorders a stream.
 
+Writes (dynamic stores)
+-----------------------
+
+When the engine serves a :class:`~repro.core.delta.DynamicStore`,
+``submit_insert`` / ``submit_delete`` apply live mutations to its delta —
+synchronously (an in-memory set op), budgeted per tenant by
+``TenantPolicy.max_writes`` (:class:`WriteBudgetExhausted` past the
+bound; the budget refills at compaction).  Reads stay on the raw static
+lane: dispatch pins the delta view, sanitizes lanes whose constants
+exceed the static extents, and decode merges the delta host-side —
+(static − tombstones) ∪ inserts per lane — off the event loop.  With a
+:class:`~repro.core.compaction.CompactionPolicy`, a write that trips the
+threshold schedules a background compaction; the epoch swap is atomic,
+in-flight batches finish against the old epoch, and the base plan is
+rebuilt eagerly so the serve loop never pays a ``StaleEpoch`` round-trip.
+
 Stats
 -----
 
@@ -75,15 +91,18 @@ import time
 import numpy as np
 
 from repro import obs
+from repro.core import delta as dyn
 from repro.core import engine as eng
+from repro.core.compaction import CompactionPolicy, compact, needs_compaction
 from repro.core.query import (
     AdmissionError, CapOverflow, CapPolicy, ExecConfig, SelectQ, ServeQ,
+    StaleEpoch,
 )
 from repro.obs import LATENCY_MS_BUCKETS, MetricsRegistry
 
 __all__ = [
     "CoalescePolicy", "TenantPolicy", "QueueFull", "ServeBroker",
-    "tail_percentile",
+    "WriteBudgetExhausted", "tail_percentile",
 ]
 
 
@@ -92,6 +111,16 @@ class QueueFull(RuntimeError):
 
     Raised synchronously by ``submit``/``submit_nowait`` (shed-newest,
     fail-fast — see the module docstring); the request was NOT enqueued.
+    """
+
+
+class WriteBudgetExhausted(RuntimeError):
+    """The tenant spent its ``TenantPolicy.max_writes`` budget.
+
+    Raised synchronously by ``submit_insert``/``submit_delete``; the write
+    was NOT applied.  The budget is resident-delta-based: it refills when
+    a compaction folds the delta into a new static epoch, so a sustained
+    writer is paced by the compactor rather than cut off forever.
     """
 
 
@@ -133,17 +162,24 @@ class TenantPolicy:
         Plan-cache quota: how many plan-cache MISSES (new compiled
         programs — one per distinct retry cap level) the tenant may
         charge.  Shared cache hits are free.
+    ``max_writes``
+        Write budget: how many inserts + deletes the tenant may have
+        resident in the delta at once; refilled when compaction folds
+        the delta down (:class:`WriteBudgetExhausted` past the bound).
     """
 
     queue_depth: int = 1024
     max_cap_doublings: int = 4
     max_plans: int = 4
+    max_writes: int = 4096
 
     def __post_init__(self):
         if self.queue_depth < 1:
             raise ValueError("queue_depth must be >= 1")
         if self.max_cap_doublings < 0 or self.max_plans < 0:
             raise ValueError("budgets must be >= 0")
+        if self.max_writes < 1:
+            raise ValueError("max_writes must be >= 1")
 
 
 def tail_percentile(samples, q: float) -> float | None:
@@ -206,6 +242,9 @@ class _TenantState:
     plans_charged: int = 0  # plan-cache misses charged against max_plans
     cap_growth_events: int = 0
     admission_denials: int = 0
+    inserts: int = 0
+    deletes: int = 0
+    writes_resident: int = 0  # writes in the live delta (budget state)
     lat_s: list = dataclasses.field(default_factory=list)
 
 
@@ -231,8 +270,10 @@ class ServeBroker:
         unbounded: bool = True,
         coalesce: CoalescePolicy = CoalescePolicy(),
         tenant_policy: TenantPolicy = TenantPolicy(),
+        compaction: CompactionPolicy | None = None,
     ):
         self.engine = engine
+        self.compaction = compaction
         cfg = (config or engine.default_config).resolved()
         # growth is broker-managed (per tenant); the base plan must never
         # self-heal behind the broker's back
@@ -262,9 +303,11 @@ class ServeBroker:
             for name in (
                 "batches", "lanes", "flush_size", "flush_deadline",
                 "flush_drain", "shed", "cap_growth_events",
-                "admission_denials", "selects",
+                "admission_denials", "selects", "inserts", "deletes",
+                "compactions", "compaction_ms",
             )
         }
+        self._compaction_task: asyncio.Task | None = None
         # SELECT queries run off-loop (each is a host-planned multi-launch
         # pipeline, not a lane); the semaphore bounds their thread fanout
         self._select_sem = asyncio.Semaphore(max(2, coalesce.max_inflight))
@@ -300,6 +343,8 @@ class ServeBroker:
         await self._task
         if self._select_tasks:  # selects accepted before the drain finish
             await asyncio.gather(*self._select_tasks, return_exceptions=True)
+        if self._compaction_task is not None and not self._compaction_task.done():
+            await self._compaction_task
         self._running = False
 
     # -- submission -----------------------------------------------------
@@ -335,6 +380,103 @@ class ServeBroker:
     async def submit(self, tenant: str, op: int, s: int = 0, p: int = 0,
                      o: int = 0):
         return await self.submit_nowait(tenant, op, s, p, o)
+
+    # -- the write path -------------------------------------------------
+
+    def submit_insert_nowait(self, tenant: str, s: int, p: int, o: int) -> None:
+        """Insert one id triple into the dynamic store's delta.
+
+        Writes apply synchronously (a delta insert is an in-memory set op
+        — there is nothing to coalesce or await) and become visible to
+        every batch dispatched after this call.  Requires the engine to
+        serve a :class:`~repro.core.delta.DynamicStore`; raises
+        :class:`WriteBudgetExhausted` when the tenant's resident-write
+        budget (``TenantPolicy.max_writes``) is spent — it refills at the
+        next compaction.  May schedule a background compaction when a
+        :class:`~repro.core.compaction.CompactionPolicy` was configured.
+        """
+        self._write(tenant, s, p, o, insert=True)
+
+    async def submit_insert(self, tenant: str, s: int, p: int, o: int) -> None:
+        self.submit_insert_nowait(tenant, s, p, o)
+
+    def submit_delete_nowait(self, tenant: str, s: int, p: int, o: int) -> None:
+        """Delete one id triple (tombstone it in the delta).
+
+        Same contract as :meth:`submit_insert_nowait`: synchronous,
+        budgeted by ``max_writes``, compaction-triggering.
+        """
+        self._write(tenant, s, p, o, insert=False)
+
+    async def submit_delete(self, tenant: str, s: int, p: int, o: int) -> None:
+        self.submit_delete_nowait(tenant, s, p, o)
+
+    def _write(self, tenant: str, s: int, p: int, o: int, *, insert: bool):
+        if not self._running or self._draining:
+            raise RuntimeError("broker is not accepting requests")
+        store = self.engine.store
+        if not isinstance(store, dyn.DynamicStore):
+            raise TypeError(
+                "writes need a DynamicStore; wrap the static store in "
+                "repro.core.delta.DynamicStore"
+            )
+        st = self._tenant(tenant)
+        if st.writes_resident >= self.tenant_policy.max_writes:
+            raise WriteBudgetExhausted(
+                f"tenant {tenant!r} has {st.writes_resident} writes resident "
+                f"(max_writes={self.tenant_policy.max_writes}); budget "
+                "refills at the next compaction"
+            )
+        if insert:
+            store.insert(s, p, o)
+            st.inserts += 1
+            self._c["inserts"].inc()
+        else:
+            store.delete(s, p, o)
+            st.deletes += 1
+            self._c["deletes"].inc()
+        st.writes_resident += 1
+        self._maybe_compact()
+
+    def _maybe_compact(self):
+        """Kick a background compaction when the policy says the delta is
+        due and none is already running.  The rebuild runs off-loop; the
+        epoch swap is atomic and reads keep serving the old epoch until
+        the swapped store lands (dispatch then sees ``StaleEpoch`` once
+        and refreshes the base plan)."""
+        if self.compaction is None or not needs_compaction(
+            self.engine.store, self.compaction
+        ):
+            return
+        if self._compaction_task is not None and not self._compaction_task.done():
+            return
+        self._compaction_task = asyncio.get_running_loop().create_task(
+            self._run_compaction()
+        )
+
+    async def _run_compaction(self):
+        t0 = time.perf_counter()
+        with obs.span("broker.compaction", cat="broker"):
+            rep = await asyncio.to_thread(
+                compact, self.engine.store,
+                backend=self.config.backend,
+            )
+        # the swap bumped the store epoch: every cached plan (base + retry
+        # levels) is stale — rebuild the base plan eagerly so the serve
+        # loop never pays the StaleEpoch round-trip
+        self._refresh_base_plan()
+        for st in self._tenants.values():
+            st.writes_resident = 0  # the delta they paid for is folded down
+        self._c["compactions"].inc()
+        self._c["compaction_ms"].inc(rep.duration_s * 1e3)
+        m = obs.STATE.metrics
+        if m is not None:
+            m.gauge("broker.epoch").set(rep.epoch)
+        return rep
+
+    def _refresh_base_plan(self):
+        self.base_plan = self.engine.compile(self._query, self.config)
+        self._retry_cfgs.clear()  # stale cap levels; recompiled on demand
 
     def submit_select_nowait(self, tenant: str, q: SelectQ) -> asyncio.Future:
         """Enqueue one SPARQL-shaped :class:`~repro.core.query.SelectQ`;
@@ -481,14 +623,22 @@ class ServeBroker:
     def _dispatch(self, reqs: list[_Req], tc0: float = 0.0, tc1: float = 0.0):
         td0 = time.perf_counter()
         qb = self._encode(reqs, self._pad_to)
-        raw = self.base_plan.submit(qb)  # async device dispatch, no sync
+        # pin the dynamic view AT dispatch: the static lane answers this
+        # batch against lanes sanitized to the static extents, and decode
+        # merges the SAME delta snapshot — writes landing mid-flight wait
+        # for the next batch (per-batch snapshot isolation)
+        try:
+            raw, view = self._submit_dyn(self.base_plan, qb)
+        except StaleEpoch:  # a compaction swapped under the base plan
+            self._refresh_base_plan()
+            raw, view = self._submit_dyn(self.base_plan, qb)
         meta = _BatchMeta(
             bid=self._bid, n_padded=int(qb.op.shape[0]),
             tc0=tc0 or td0, tc1=tc1 or td0, td0=td0,
             td1=time.perf_counter(),
         )
         self._bid += 1
-        self._inflight.append((raw, reqs, meta))
+        self._inflight.append((raw, reqs, meta, qb, view))
         self._c["batches"].inc()
         self._c["lanes"].inc(len(reqs))
         m = obs.STATE.metrics
@@ -511,6 +661,16 @@ class ServeBroker:
             op[i], s[i], p[i], o[i] = r.op, r.s, r.p, r.o
         return eng.ServeBatch(op=op, s=s, p=p, o=o)
 
+    def _submit_dyn(self, plan, qb: eng.ServeBatch):
+        """Static-lane dispatch for a possibly-dynamic store: sanitize
+        lanes whose constants exceed the static extents (delta-only ids
+        must not reach the device), submit raw, and return the pinned
+        ``(raw, view)`` pair — the caller merges decode-time with the SAME
+        view.  ``view`` is None for static stores / empty deltas."""
+        view = self.engine.dynamic_view()
+        qb_run = qb if view is None else view.sanitize_batch(qb)
+        return plan.submit(qb_run), view
+
     def _padded_batch(self, b: int) -> int:
         """pow2 bucket (>= 8), then data-axis divisibility when sharded."""
         n = 8
@@ -524,14 +684,23 @@ class ServeBroker:
 
     # -- streamed decode + per-tenant growth ----------------------------
 
-    async def _deliver(self, raw, reqs: list[_Req], meta: _BatchMeta):
+    async def _deliver(self, raw, reqs: list[_Req], meta: _BatchMeta,
+                       qb: eng.ServeBatch, view):
         has_u = any(r.op in eng._UNBOUNDED_OPS for r in reqs)
         meta.tf0 = time.perf_counter()
-        # the blocking device->host fetch runs off-loop so submitters keep
+
+        # the blocking device->host fetch (and the host-side delta merge,
+        # when the store is dynamic) runs off-loop so submitters keep
         # filling the next batch while this one decodes
-        host = await asyncio.to_thread(
-            eng.host_result, raw, unbounded=has_u and self.unbounded
-        )
+        def fetch():
+            host = eng.host_result(raw, unbounded=has_u and self.unbounded)
+            if view is not None:
+                # merge against the ORIGINAL (unsanitized) lane constants:
+                # lanes masked off the device get delta-only answers
+                host = view.merge_lanes(qb.op, qb.s, qb.p, qb.o, host)
+            return host
+
+        host = await asyncio.to_thread(fetch)
         meta.tf1 = time.perf_counter()
         retry_tenants = {
             reqs[i].tenant
@@ -662,10 +831,18 @@ class ServeBroker:
             with obs.span("broker.retry", cat="broker", tenant=tenant,
                           level=level, cap=cap, lanes=len(rs)):
                 qb = self._encode(rs, 0)
+                try:
+                    raw, view = self._submit_dyn(plan, qb)
+                except StaleEpoch:  # compaction swapped mid-retry
+                    plan = self.engine.compile(
+                        self._query, cfg, admit=self._admit(st)
+                    )
+                    raw, view = self._submit_dyn(plan, qb)
                 host = eng.host_result(
-                    plan.submit(qb),
-                    unbounded=any(r.op in eng._UNBOUNDED_OPS for r in rs),
+                    raw, unbounded=any(r.op in eng._UNBOUNDED_OPS for r in rs),
                 )
+                if view is not None:
+                    host = view.merge_lanes(qb.op, qb.s, qb.p, qb.o, host)
             if not host.overflow[: len(rs)].any():
                 return [
                     eng.decode_lane(r.op, host, i) for i, r in enumerate(rs)
@@ -695,20 +872,28 @@ class ServeBroker:
     def reset_stats(self) -> None:
         """Zero EVERY counter ``stats()`` reports, global and per-tenant
         (flush reasons, shed / cap-growth / admission-denial counts, queue
-        peak, latency samples) — the benchmark warmup boundary.  Admission
-        STATE (``cap_level``, ``plans_charged``) is retained: those are
-        live budgets governing future admissions, not measurements."""
+        peak, latency samples, insert / delete / compaction counts) — the
+        benchmark warmup boundary.  Admission and write-budget STATE
+        (``cap_level``, ``plans_charged``, ``writes_resident``) is
+        retained: those are live budgets governing future admissions, not
+        measurements — and ``delta_triples`` / ``tombstones`` in
+        ``stats()`` are live gauges of the store, unaffected by reset."""
         self.metrics.reset()
         self._queue_peak = 0
         for st in self._tenants.values():
             st.lat_s.clear()
             st.completed = st.failed = st.shed = 0
             st.cap_growth_events = st.admission_denials = 0
+            st.inserts = st.deletes = 0
 
     def stats(self) -> dict:
-        """Structured serving stats (JSON-ready)."""
+        """Structured serving stats (JSON-ready).  ``delta_triples`` and
+        ``tombstones`` are LIVE store gauges (0 for static stores);
+        everything else is counted since the last ``reset_stats``."""
         all_lat = [t for st in self._tenants.values() for t in st.lat_s]
         batches = self._c["batches"].value
+        store = self.engine.store
+        d = store.delta if isinstance(store, dyn.DynamicStore) else None
         return {
             "batches": batches,
             "lanes": self._c["lanes"].value,
@@ -724,6 +909,12 @@ class ServeBroker:
             "shed": self._c["shed"].value,
             "cap_growth_events": self._c["cap_growth_events"].value,
             "admission_denials": self._c["admission_denials"].value,
+            "inserts": self._c["inserts"].value,
+            "deletes": self._c["deletes"].value,
+            "compactions": self._c["compactions"].value,
+            "compaction_ms": self._c["compaction_ms"].value,
+            "delta_triples": d.n_inserts if d is not None else 0,
+            "tombstones": d.n_tombstones if d is not None else 0,
             "queries": len(all_lat),
             "p50_ms": _ms(tail_percentile(all_lat, 50)),
             "p99_ms": _ms(tail_percentile(all_lat, 99)),
@@ -736,6 +927,9 @@ class ServeBroker:
                     "cap_level": st.cap_level,
                     "plans_charged": st.plans_charged,
                     "cap_growth_events": st.cap_growth_events,
+                    "inserts": st.inserts,
+                    "deletes": st.deletes,
+                    "writes_resident": st.writes_resident,
                     "p50_ms": _ms(tail_percentile(st.lat_s, 50)),
                     "p99_ms": _ms(tail_percentile(st.lat_s, 99)),
                 }

@@ -16,7 +16,7 @@ import numpy as np
 import jax.numpy as jnp
 import pytest
 
-from repro.core import engine as eng, k2triples
+from repro.core import delta, engine as eng, k2triples
 from repro.core.query import (
     AdmissionError, CapOverflow, ExecConfig, ServeQ,
 )
@@ -447,11 +447,12 @@ def test_stats_surface(store_and_truth):
 
 def test_reset_stats_clears_every_counter(store_and_truth):
     """``reset_stats`` zeroes EVERY counter ``stats()`` reports — flush
-    reasons, shed, cap-growth, admission denials, queue peak, per-tenant
-    counts — while retaining admission STATE (cap_level, plans_charged),
-    which governs future admissions rather than measuring the past."""
+    reasons, shed, cap-growth, admission denials, queue peak, write and
+    compaction counts, per-tenant counts — while retaining admission and
+    write-budget STATE (cap_level, plans_charged, writes_resident), which
+    governs future admissions rather than measuring the past."""
     store, T, ds = store_and_truth
-    E = eng.Engine(store)
+    E = eng.Engine(delta.DynamicStore(store))  # writes need a delta
     s_hot, p_hot, _ = _hot_row(T)
     cfg = ExecConfig(backend="jnp", cap=2)  # tiny cap: growth guaranteed
 
@@ -464,7 +465,10 @@ def test_reset_stats_clears_every_counter(store_and_truth):
             ),
         ) as b:
             # drive every counter: growth (hot row at cap=2), a shed
-            # (queue_depth=2), and ordinary completions
+            # (queue_depth=2), writes, and ordinary completions
+            b.submit_insert_nowait("hot", 1, 1, 2)
+            b.submit_delete_nowait("hot", 1, 1, 2)
+            b.submit_insert_nowait("calm", 2, 1, 3)
             futs = [b.submit_nowait("hot", eng.OP_ROW, s_hot, p_hot, 0)
                     for _ in range(2)]
             with pytest.raises(QueueFull):
@@ -481,11 +485,14 @@ def test_reset_stats_clears_every_counter(store_and_truth):
     assert st["cap_growth_events"] >= 1
     assert st["shed"] == 1
     assert st["tenants"]["hot"]["cap_growth_events"] >= 1
+    assert st["inserts"] == 2 and st["deletes"] == 1
+    assert st["tenants"]["hot"]["inserts"] == 1
+    assert st["tenants"]["hot"]["deletes"] == 1
 
     zero_keys = (
         "batches", "lanes", "flush_size", "flush_deadline", "flush_drain",
         "queue_peak", "shed", "cap_growth_events", "admission_denials",
-        "queries",
+        "queries", "inserts", "deletes", "compactions", "compaction_ms",
     )
     for k in zero_keys:
         assert cleared[k] == 0, (k, cleared[k])
@@ -493,12 +500,15 @@ def test_reset_stats_clears_every_counter(store_and_truth):
     assert cleared["p50_ms"] is None and cleared["p99_ms"] is None
     for name, ts in cleared["tenants"].items():
         for k in ("queries", "failed", "shed", "pending",
-                  "cap_growth_events"):
+                  "cap_growth_events", "inserts", "deletes"):
             assert ts[k] == 0, (name, k, ts[k])
         assert ts["p50_ms"] is None and ts["p99_ms"] is None
-    # admission STATE survives: budgets keep governing future growth
+    # admission + write-budget STATE survives: budgets keep governing
     assert cleared["tenants"]["hot"]["cap_level"] >= 1
     assert cleared["tenants"]["hot"]["plans_charged"] >= 1
+    assert cleared["tenants"]["hot"]["writes_resident"] == 2
+    # delta_triples / tombstones are LIVE store gauges, not measurements
+    assert cleared["tombstones"] == 1
 
 
 def test_submit_after_close_rejected(store_and_truth):

@@ -1,0 +1,417 @@
+"""Differential suite for the dynamic (LSM-delta) store.
+
+Randomized insert/delete/query interleavings on a
+:class:`~repro.core.delta.DynamicStore` are checked against a pure-python
+truth set maintained alongside — every pattern shape, join categories
+A–F, and SELECT chains — on both scan backends and both predicate-index
+layouts, before AND after a mid-trace compaction.  The required edge
+cases ride the same traces: delete-then-reinsert (of static triples),
+inserts of ids the static store has never seen, and (for dictionary
+stores) inserts of entirely unseen *terms* through the appended-id-range
+dictionary extension.
+
+Epoch semantics get their own tests: a compaction swap must raise
+:class:`~repro.core.query.StaleEpoch` on the raw ``Plan.submit`` lane and
+recompile transparently on ``Plan.__call__``.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import compaction, delta, k2triples
+from repro.core import engine as eng
+from repro.core.dictionary import ExtendedDictionary, build_dictionary
+from repro.core.predindex import PredBitmap
+from repro.core.query import (
+    ExecConfig, JoinQ, SelectQ, ServeQ, StaleEpoch, TriplePatternQ,
+)
+
+
+def test_opcodes_in_sync():
+    """delta.py mirrors the serve-IR op constants instead of importing
+    engine (circular import); this is the tripwire if they ever drift."""
+    assert (
+        delta.OP_CHECK, delta.OP_ROW, delta.OP_COL,
+        delta.OP_S_ANY_ANY, delta.OP_ANY_ANY_O, delta.OP_S_ANY_O,
+    ) == (
+        eng.OP_CHECK, eng.OP_ROW, eng.OP_COL,
+        eng.OP_S_ANY_ANY, eng.OP_ANY_ANY_O, eng.OP_S_ANY_O,
+    )
+    assert set(delta._NEED_P) == {eng.OP_CHECK, eng.OP_ROW, eng.OP_COL}
+    assert set(eng._UNBOUNDED_OPS) == {
+        delta.OP_S_ANY_O, delta.OP_S_ANY_ANY, delta.OP_ANY_ANY_O
+    }
+
+
+# ---------------------------------------------------------------------------
+# delta-layer unit semantics (pure python, no device)
+# ---------------------------------------------------------------------------
+
+
+def _mini_store(seed=0, n=80, E=20, P=3):
+    rng = np.random.default_rng(seed)
+    ids = np.unique(rng.integers(1, [E + 1, P + 1, E + 1], size=(n, 3)), axis=0)
+    st = k2triples.from_id_triples(
+        ids, n_so=E, n_subjects=E, n_objects=E, n_preds=P
+    )
+    return st, set(map(tuple, ids.tolist()))
+
+
+def test_delta_store_semantics():
+    st, T = _mini_store()
+    d = delta.DeltaStore(st)
+    t0 = next(iter(sorted(T)))
+
+    d.delete(*t0)
+    snap = d.snapshot()
+    assert snap.tomb_contains(*t0) and not snap.contains(*t0)
+    # reinsert clears the tombstone and does NOT leave a delta insert for
+    # a triple the static store already holds? It does — the delta has no
+    # static visibility; the merge unions it away and compaction dedups.
+    d.insert(*t0)
+    snap = d.snapshot()
+    assert snap.contains(*t0) and not snap.tomb_contains(*t0)
+
+    # snapshot is version-cached: no mutation -> same object
+    assert d.snapshot() is snap
+    d.insert(1, 1, 1)
+    assert d.snapshot() is not snap
+
+    # delete of a delta insert removes it AND tombstones (the same id
+    # triple may also exist statically)
+    d.delete(1, 1, 1)
+    snap = d.snapshot()
+    assert not snap.contains(1, 1, 1) and snap.tomb_contains(1, 1, 1)
+
+
+def test_delta_rebase_keeps_post_snapshot_writes():
+    st, _ = _mini_store()
+    d = delta.DeltaStore(st)
+    d.insert(2, 1, 3)
+    absorbed = d.snapshot()
+    d.insert(4, 2, 5)          # lands AFTER the compaction pin
+    d.delete(6, 1, 7)
+    d2 = d.rebase(st, absorbed)
+    snap = d2.snapshot()
+    assert not snap.contains(2, 1, 3)       # folded into the new static
+    assert snap.contains(4, 2, 5)           # survived the swap
+    assert snap.tomb_contains(6, 1, 7)
+
+
+def test_dynamic_store_proxies_and_validates():
+    st, _ = _mini_store()
+    ds = delta.DynamicStore(st)
+    assert ds.n_so == st.n_so and ds.n_preds == st.n_preds
+    assert ds.epoch == 0
+    with pytest.raises(ValueError):
+        ds.insert(0, 1, 1)  # ids are 1-based
+
+
+def test_pred_bitmap():
+    b = PredBitmap()
+    b.add(5, 3)
+    b.add(5, 1)
+    b.add(9, 64)  # beyond one machine word: python-int bitmask
+    assert b.preds_of(5).tolist() == [1, 3]
+    assert b.preds_of(9).tolist() == [64]
+    assert b.preds_of(7).tolist() == []
+    assert 5 in b and 7 not in b
+    assert sorted(b.entities()) == [5, 9] and len(b) == 2
+
+
+def test_extended_dictionary_appended_range():
+    base = build_dictionary(
+        [("a", "p", "b"), ("b", "p", "c"), ("a", "q", "c")]
+    )
+    d = ExtendedDictionary(base)
+    n_s0, n_o0, n_p0 = d.n_subjects, d.n_objects, d.n_preds
+
+    sid = d.add_term("zz-new")
+    assert sid == d.ext_base + 1  # appended range: static ids never move
+    assert d.add_term("zz-new") == sid  # idempotent
+    assert d.add_term("a") == base.encode_subject("a")  # base hit, no mint
+    assert d.decode_subject(sid) == "zz-new"
+    assert d.decode_object(sid) == "zz-new"  # shared S/O extension pool
+    assert d.encode_subject("zz-new") == sid
+    assert d.n_subjects == max(n_s0, d.ext_base + 1)
+    assert d.n_objects == max(n_o0, d.ext_base + 1)
+
+    pid = d.add_predicate("r-new")
+    assert pid == n_p0 + 1 and d.decode_predicate(pid) == "r-new"
+    assert d.encode_predicate("p") == base.encode_predicate("p")
+
+
+# ---------------------------------------------------------------------------
+# the randomized churn differential
+# ---------------------------------------------------------------------------
+
+_E, _P = 24, 4
+
+
+def _probe_patterns(E, T, run, rng):
+    """Every pattern shape vs the python truth set."""
+    # (S, P, ?O) / (?S, P, O) / (S, P, O)
+    for _ in range(6):
+        s = int(rng.integers(1, E + 3))
+        p = int(rng.integers(1, _P + 2))
+        o = int(rng.integers(1, E + 3))
+        assert run(TriplePatternQ(s, p, None)).tolist() == sorted(
+            oo for (ss, pp, oo) in T if ss == s and pp == p
+        )
+        assert run(TriplePatternQ(None, p, o)).tolist() == sorted(
+            ss for (ss, pp, oo) in T if oo == o and pp == p
+        )
+        assert bool(run(TriplePatternQ(s, p, o))) == ((s, p, o) in T)
+    for t in list(sorted(T))[:4]:  # present checks
+        assert bool(run(TriplePatternQ(*t)))
+    # (S, ?P, O) / (S, ?P, ?O) / (?S, ?P, O)
+    for _ in range(3):
+        s = int(rng.integers(1, E + 3))
+        o = int(rng.integers(1, E + 3))
+        assert run(TriplePatternQ(s, None, o)).tolist() == sorted(
+            pp for (ss, pp, oo) in T if ss == s and oo == o
+        )
+        want = {}
+        for (ss, pp, oo) in T:
+            if ss == s:
+                want.setdefault(pp, []).append(oo)
+        got = {k: sorted(v.tolist()) for k, v in run(
+            TriplePatternQ(s, None, None)).items()}
+        assert got == {k: sorted(v) for k, v in want.items()}
+        want = {}
+        for (ss, pp, oo) in T:
+            if oo == o:
+                want.setdefault(pp, []).append(ss)
+        got = {k: sorted(v.tolist()) for k, v in run(
+            TriplePatternQ(None, None, o)).items()}
+        assert got == {k: sorted(v) for k, v in want.items()}
+    # (?S, P, ?O) pairs + full dump
+    p = int(rng.integers(1, _P + 2))
+    assert sorted(map(tuple, run(TriplePatternQ(None, p, None)).tolist())) \
+        == sorted((ss, oo) for (ss, pp, oo) in T if pp == p)
+    got = {k: sorted(map(tuple, v.tolist())) for k, v in run(
+        TriplePatternQ(None, None, None)).items()}
+    want = {}
+    for (ss, pp, oo) in T:
+        want.setdefault(pp, []).append((ss, oo))
+    assert got == {k: sorted(v) for k, v in want.items()}
+
+
+def _side(T, vpos, p, c):
+    """ids X with (X p c) when the variable sits at s, else (c p X)."""
+    if vpos == "s":
+        return {ss for (ss, pp, oo) in T if pp == p and oo == c}
+    return {oo for (ss, pp, oo) in T if pp == p and ss == c}
+
+
+def _stage2(T, v2, p, x):
+    if v2 == "s":
+        return sorted(oo for (ss, pp, oo) in T if pp == p and ss == x)
+    return sorted(ss for (ss, pp, oo) in T if pp == p and oo == x)
+
+
+def _probe_joins(T, run, rng, Ptot):
+    c1 = int(rng.integers(1, _E + 1))
+    c2 = int(rng.integers(1, _E + 1))
+    v1, v2 = "s", "o"
+    got = run(JoinQ("A", v1, v2, p1=1, c1=c1, p2=2, c2=c2))
+    assert got.tolist() == sorted(_side(T, v1, 1, c1) & _side(T, v2, 2, c2))
+    got = run(JoinQ("B", v1, v2, p1=1, c1=c1, c2=c2))
+    a = _side(T, v1, 1, c1)
+    want = {p: sorted(a & _side(T, v2, p, c2)) for p in range(1, Ptot + 1)}
+    assert {p: v.tolist() for p, v in got.items()} == {
+        p: v for p, v in want.items() if v
+    }
+    got = run(JoinQ("C", v1, v2, c1=c1, c2=c2))
+    u1 = set().union(*[_side(T, v1, p, c1) for p in range(1, Ptot + 1)])
+    u2 = set().union(*[_side(T, v2, p, c2) for p in range(1, Ptot + 1)])
+    assert got.tolist() == sorted(u1 & u2)
+    got = run(JoinQ("D", v1, v2, p1=1, c1=c1, p2=2))
+    want = {
+        x: _stage2(T, v2, 2, x) for x in _side(T, v1, 1, c1)
+        if _stage2(T, v2, 2, x)
+    }
+    assert {x: v.tolist() for x, v in got.items()} == want
+    got = run(JoinQ("E", v1, v2, p1=1, c1=c1))
+    want = {}
+    for x in _side(T, v1, 1, c1):
+        for p in range(1, Ptot + 1):
+            ys = _stage2(T, v2, p, x)
+            if ys:
+                want.setdefault(p, {})[x] = ys
+    assert {
+        p: {x: v.tolist() for x, v in d.items()} for p, d in got.items()
+    } == want
+    got = run(JoinQ("F", v1, v2, c1=c1))
+    xs = set().union(*[_side(T, v1, p, c1) for p in range(1, Ptot + 1)])
+    want = {}
+    for x in xs:
+        for p in range(1, Ptot + 1):
+            ys = _stage2(T, v2, p, x)
+            if ys:
+                want.setdefault(p, {})[x] = ys
+    assert {
+        p: {x: v.tolist() for x, v in d.items()} for p, d in got.items()
+    } == want
+
+
+def _probe_select(T, run):
+    q = SelectQ(
+        select=("?a", "?b", "?c"),
+        where=(TriplePatternQ("?a", 1, "?b"), TriplePatternQ("?b", 2, "?c")),
+    )
+    got = run(q)
+    rows = set(zip(
+        got["?a"].tolist(), got["?b"].tolist(), got["?c"].tolist()
+    ))
+    want = {
+        (s, o, o2)
+        for (s, p, o) in T if p == 1
+        for (s2, p2, o2) in T if p2 == 2 and s2 == o
+    }
+    assert rows == want
+
+
+def _churn(ds, T, rng, n_ops):
+    for _ in range(n_ops):
+        if T and rng.random() < 0.4:
+            t = list(sorted(T))[int(rng.integers(len(T)))]
+            ds.delete(*t)
+            T.discard(t)
+        else:
+            # inserts may carry ids the static store never saw (E+1, E+2
+            # entities; P+1 predicate) — the appended range
+            t = (
+                int(rng.integers(1, _E + 3)),
+                int(rng.integers(1, _P + 2)),
+                int(rng.integers(1, _E + 3)),
+            )
+            ds.insert(*t)
+            T.add(t)
+
+
+@pytest.mark.parametrize("layout", ["dac", "fixed"])
+@pytest.mark.parametrize("backend", ["pallas", "jnp"])
+def test_churn_differential(backend, layout):
+    """insert/delete/query interleavings vs python truth, both backends ×
+    both pred-index layouts, with a compaction in the middle of the
+    trace and more churn after it."""
+    seed = {"pallas": 0, "jnp": 1}[backend] * 2 + {"dac": 0, "fixed": 1}[layout]
+    rng = np.random.default_rng(seed)
+    ids = np.unique(
+        rng.integers(1, [_E + 1, _P + 1, _E + 1], size=(130, 3)), axis=0
+    )
+    st = k2triples.from_id_triples(
+        ids, n_so=_E, n_subjects=_E, n_objects=_E, n_preds=_P
+    )
+    ds = delta.DynamicStore(st)
+    E = eng.Engine(store=ds)
+    cfg = ExecConfig(backend=backend, pred_index_layout=layout, cap=128)
+    run = lambda q: E.compile(q, cfg)()  # noqa: E731
+    T = set(map(tuple, ids.tolist()))
+
+    # explicit delete-then-reinsert of a STATIC triple
+    t0 = next(iter(sorted(T)))
+    ds.delete(*t0)
+    T.discard(t0)
+    assert not bool(run(TriplePatternQ(*t0)))
+    ds.insert(*t0)
+    T.add(t0)
+    assert bool(run(TriplePatternQ(*t0)))
+
+    _churn(ds, T, rng, 25)
+    Ptot = delta.total_preds(ds)
+    _probe_patterns(_E, T, run, rng)
+    _probe_joins(T, run, rng, Ptot)
+    _probe_select(T, run)
+
+    rep = compaction.compact(ds, backend=backend)
+    assert ds.epoch == 1 and ds.delta.empty
+    assert rep.n_triples == len(T)
+
+    # the SAME probes stay green post-swap (plans recompile at epoch 1)
+    _probe_patterns(_E, T, run, rng)
+    _probe_joins(T, run, rng, Ptot)
+
+    # and after further churn on the compacted epoch
+    _churn(ds, T, rng, 15)
+    _probe_patterns(_E, T, run, rng)
+    _probe_select(T, run)
+
+
+# ---------------------------------------------------------------------------
+# unseen terms through the string path
+# ---------------------------------------------------------------------------
+
+
+def test_unseen_term_inserts_and_id_stability():
+    strs = [
+        ("s:a", "p:x", "s:b"), ("s:b", "p:x", "o:c"),
+        ("s:a", "p:y", "o:c"), ("s:d", "p:y", "s:a"),
+    ]
+    st = k2triples.from_string_triples(strs)
+    ds = delta.DynamicStore(st)
+    E = eng.Engine(store=ds)
+    cfg = ExecConfig(backend="jnp", cap=32)
+    d = ds.dictionary
+    assert isinstance(d, ExtendedDictionary)
+
+    ds.insert_strings([("new:e", "p:x", "s:a"), ("s:a", "new:q", "new:f")])
+    e_id = d.encode_subject("new:e")
+    f_id = d.encode_object("new:f")
+    q_id = d.encode_predicate("new:q")
+    assert e_id > d.ext_base and q_id > d.pred_base  # appended range
+
+    px = d.encode_predicate("p:x")
+    sa = d.encode_subject("s:a")
+    assert bool(E.compile(TriplePatternQ(e_id, px, sa), cfg)())
+    assert E.compile(TriplePatternQ(sa, q_id, None), cfg)().tolist() == [f_id]
+
+    ds.delete_strings([("s:a", "p:x", "s:b")])
+    sb = d.encode_object("s:b")
+    assert not bool(E.compile(TriplePatternQ(sa, px, sb), cfg)())
+    ds.delete_strings([("never", "seen", "terms")])  # no-op, no raise
+
+    compaction.compact(ds, backend="jnp")
+    # ids NEVER move across epochs: the same strings encode identically
+    assert d.encode_subject("new:e") == e_id
+    assert d.encode_predicate("new:q") == q_id
+    assert d.decode_subject(e_id) == "new:e"
+    assert bool(E.compile(TriplePatternQ(e_id, px, sa), cfg)())
+    assert not bool(E.compile(TriplePatternQ(sa, px, sb), cfg)())
+
+
+# ---------------------------------------------------------------------------
+# epoch semantics
+# ---------------------------------------------------------------------------
+
+
+def test_stale_epoch_submit_and_transparent_call():
+    st, T = _mini_store(seed=3)
+    ds = delta.DynamicStore(st)
+    E = eng.Engine(store=ds)
+    cfg = ExecConfig(backend="jnp", cap=64)
+    plan = E.compile(ServeQ(unbounded=False), cfg)
+    qb = eng.ServeBatch(
+        op=np.zeros(8, np.int32), s=np.ones(8, np.int32),
+        p=np.ones(8, np.int32), o=np.ones(8, np.int32),
+    )
+    raw = plan.submit(qb)  # fine at epoch 0
+    assert raw is not None
+
+    ds.insert(1, 1, 1)
+    compaction.compact(ds, backend="jnp")
+    assert ds.epoch == 1
+
+    # the raw lane refuses: its executor was pinned at epoch 0
+    with pytest.raises(StaleEpoch):
+        plan.submit(qb)
+    # __call__ recompiles transparently and keeps answering
+    r = plan(qb)
+    assert bool(np.asarray(r.hit)[0])  # (1,1,1) was just inserted+compacted
+
+    # pattern plans recompile transparently too
+    p2 = E.compile(TriplePatternQ(1, 1, None), cfg)
+    ds.insert(1, 1, 9)
+    compaction.compact(ds, backend="jnp")
+    assert 9 in p2().tolist()
