@@ -344,10 +344,17 @@ class DynamicStore:
     # --- writes ------------------------------------------------------------
 
     def insert(self, s: int, p: int, o: int) -> None:
-        self._delta.insert(s, p, o)
+        # under the store lock: ``swap`` rebases and REPLACES self._delta
+        # while holding it, so a write loaded against the pre-rebase delta
+        # outside the lock could land on the orphaned store after the
+        # rebase copied it — silently dropped.  Lock order (store lock,
+        # then delta lock inside DeltaStore.insert) matches swap/rebase.
+        with self._lock:
+            self._delta.insert(s, p, o)
 
     def delete(self, s: int, p: int, o: int) -> None:
-        self._delta.delete(s, p, o)
+        with self._lock:
+            self._delta.delete(s, p, o)
 
     def insert_strings(self, triples) -> int:
         """Insert string triples, minting appended ids for unseen terms."""
@@ -356,7 +363,7 @@ class DynamicStore:
             raise ValueError("store has no dictionary; use insert(s, p, o)")
         n = 0
         for (s, p, o) in triples:
-            self._delta.insert(d.add_term(s), d.add_predicate(p), d.add_term(o))
+            self.insert(d.add_term(s), d.add_predicate(p), d.add_term(o))
             n += 1
         return n
 
@@ -370,7 +377,7 @@ class DynamicStore:
                 ids = (d.encode_subject(s), d.encode_predicate(p), d.encode_object(o))
             except KeyError:
                 continue  # unknown term -> triple cannot exist
-            self._delta.delete(*ids)
+            self.delete(*ids)
             n += 1
         return n
 
@@ -378,7 +385,12 @@ class DynamicStore:
 
     def view(self) -> "DynView":
         with self._lock:
-            return DynView(self._static, self._delta.snapshot(), self._epoch)
+            d = self._dictionary
+            return DynView(
+                self._static, self._delta.snapshot(), self._epoch,
+                ext_minted=d.matrix_extent if d is not None else 0,
+                preds_minted=d.n_preds if d is not None else 0,
+            )
 
     # --- compaction hand-off ----------------------------------------------
 
@@ -397,12 +409,21 @@ class DynamicStore:
 
 
 def view_of(store) -> "DynView | None":
-    """The delta lane for ``store``, or None when reads are purely static."""
-    if isinstance(store, DynamicStore):
-        v = store.view()
-        if not v.snap.empty:
-            return v
-    return None
+    """The delta lane for ``store``, or None when reads are purely static.
+
+    A view is returned not only when the delta snapshot holds mutations
+    but also whenever ids beyond the static extents exist at all (the
+    dictionary minted appended terms with no resident insert yet, e.g.
+    ``add_term`` before the first write or between epochs) — those lanes
+    still need sanitizing, or a clamped device gather would read the
+    wrong row instead of answering empty.
+    """
+    if not isinstance(store, DynamicStore):
+        return None
+    v = store.view()
+    if v.snap.empty and not v.needs_sanitize:
+        return None
+    return v
 
 
 def snapshot_of(store) -> DeltaSnapshot | None:
@@ -427,12 +448,35 @@ class DynView:
     can never cause a false overflow.
     """
 
-    def __init__(self, static: K2TriplesStore, snap: DeltaSnapshot, epoch: int):
+    def __init__(
+        self,
+        static: K2TriplesStore,
+        snap: DeltaSnapshot,
+        epoch: int,
+        *,
+        ext_minted: int = 0,
+        preds_minted: int = 0,
+    ):
         self.static = static
         self.snap = snap
         self.epoch = epoch
         self.ext_static = max(static.n_subjects, static.n_objects)
         self.preds_static = static.n_preds
+        # largest ids in existence anywhere — delta-resident OR merely
+        # minted by the dictionary's appended range with no insert yet
+        self.ext_minted = max(
+            self.ext_static, snap.n_subjects, snap.n_objects, ext_minted
+        )
+        self.preds_minted = max(self.preds_static, snap.n_preds, preds_minted)
+
+    @property
+    def needs_sanitize(self) -> bool:
+        """Ids beyond the static extents exist: lanes must be masked even
+        when the delta snapshot itself is empty."""
+        return (
+            self.ext_minted > self.ext_static
+            or self.preds_minted > self.preds_static
+        )
 
     @property
     def total_preds(self) -> int:

@@ -87,6 +87,7 @@ import collections
 import dataclasses
 import math
 import time
+import warnings
 
 import numpy as np
 
@@ -304,7 +305,7 @@ class ServeBroker:
                 "batches", "lanes", "flush_size", "flush_deadline",
                 "flush_drain", "shed", "cap_growth_events",
                 "admission_denials", "selects", "inserts", "deletes",
-                "compactions", "compaction_ms",
+                "compactions", "compaction_ms", "compaction_errors",
             )
         }
         self._compaction_task: asyncio.Task | None = None
@@ -450,12 +451,36 @@ class ServeBroker:
             return
         if self._compaction_task is not None and not self._compaction_task.done():
             return
-        self._compaction_task = asyncio.get_running_loop().create_task(
-            self._run_compaction()
-        )
+        task = asyncio.get_running_loop().create_task(self._run_compaction())
+        task.add_done_callback(self._observe_compaction)
+        self._compaction_task = task
+
+    def _observe_compaction(self, task: asyncio.Task) -> None:
+        """Surface a background-compaction failure when the task completes
+        (not first at ``drain``): count it and warn.  The broker keeps
+        serving the old epoch — the delta simply grows until the next
+        write re-triggers the policy."""
+        if task.cancelled():
+            return
+        exc = task.exception()
+        if exc is not None:
+            self._c["compaction_errors"].inc()
+            warnings.warn(
+                f"background compaction failed: {exc!r}", RuntimeWarning,
+                stacklevel=2,
+            )
 
     async def _run_compaction(self):
-        t0 = time.perf_counter()
+        # writes resident at this point are exactly the entries the pinned
+        # snapshot will absorb (writes racing in during the rebuild stay
+        # resident in the rebased delta and must keep paying budget) —
+        # capture per tenant so the refill below decrements rather than
+        # zeroing away still-resident raced writes.  A write landing
+        # between this capture and the snapshot pin is absorbed but not
+        # decremented: it stays counted, erring on the strict side.
+        absorbed = {
+            name: st.writes_resident for name, st in self._tenants.items()
+        }
         with obs.span("broker.compaction", cat="broker"):
             rep = await asyncio.to_thread(
                 compact, self.engine.store,
@@ -463,10 +488,15 @@ class ServeBroker:
             )
         # the swap bumped the store epoch: every cached plan (base + retry
         # levels) is stale — rebuild the base plan eagerly so the serve
-        # loop never pays the StaleEpoch round-trip
-        self._refresh_base_plan()
-        for st in self._tenants.values():
-            st.writes_resident = 0  # the delta they paid for is folded down
+        # loop never pays the StaleEpoch round-trip.  Off the event loop:
+        # Engine.compile is a full JAX trace+JIT and must not stall
+        # intake/dispatch; a dispatch racing the refresh self-heals via
+        # its own StaleEpoch recompile.
+        await asyncio.to_thread(self._refresh_base_plan)
+        for name, st in self._tenants.items():
+            st.writes_resident = max(
+                0, st.writes_resident - absorbed.get(name, 0)
+            )
         self._c["compactions"].inc()
         self._c["compaction_ms"].inc(rep.duration_s * 1e3)
         m = obs.STATE.metrics
@@ -913,6 +943,7 @@ class ServeBroker:
             "deletes": self._c["deletes"].value,
             "compactions": self._c["compactions"].value,
             "compaction_ms": self._c["compaction_ms"].value,
+            "compaction_errors": self._c["compaction_errors"].value,
             "delta_triples": d.n_inserts if d is not None else 0,
             "tombstones": d.n_tombstones if d is not None else 0,
             "queries": len(all_lat),

@@ -15,6 +15,8 @@ Epoch semantics get their own tests: a compaction swap must raise
 recompile transparently on ``Plan.__call__``.
 """
 
+import threading
+
 import numpy as np
 import pytest
 
@@ -96,6 +98,83 @@ def test_delta_rebase_keeps_post_snapshot_writes():
     assert not snap.contains(2, 1, 3)       # folded into the new static
     assert snap.contains(4, 2, 5)           # survived the swap
     assert snap.tomb_contains(6, 1, 7)
+
+
+def test_racing_writes_survive_compaction_swap():
+    """Writes issued concurrently with background compactions must never
+    land on the orphaned pre-rebase delta (the lost-write race): the
+    store lock serializes insert/delete against ``swap``, so every write
+    is visible after the dust settles."""
+    st, T = _mini_store(seed=5)
+    ds = delta.DynamicStore(st)
+    errs: list[Exception] = []
+    written = set()
+
+    def writer():
+        try:
+            for i in range(300):
+                t = (21 + i % 5, 1 + i % 3, 1 + i % 20)
+                ds.insert(*t)
+                written.add(t)
+        except Exception as e:  # pragma: no cover - diagnostic only
+            errs.append(e)
+
+    def compactor():
+        try:
+            for _ in range(6):
+                compaction.compact(ds, backend="jnp")
+        except Exception as e:  # pragma: no cover - diagnostic only
+            errs.append(e)
+
+    w = threading.Thread(target=writer)
+    c = threading.Thread(target=compactor)
+    w.start()
+    c.start()
+    w.join()
+    c.join()
+    assert not errs
+    # final quiescent fold-down: the static side must now hold every write
+    compaction.compact(ds, backend="jnp")
+    assert ds.delta.empty
+    got = set(map(tuple, compaction.dump_static_ids(ds.static).tolist()))
+    assert got == T | written
+
+
+def test_view_of_sanitizes_minted_ids_with_empty_delta():
+    """``add_term``/``add_predicate`` with no resident insert yet: the
+    minted ids exceed the static extents, so dispatch still needs a
+    sanitizing view even though the delta snapshot is empty — otherwise a
+    clamped device gather reads the wrong row instead of answering empty."""
+    strs = [("s:a", "p:x", "s:b"), ("s:b", "p:x", "o:c"), ("s:a", "p:y", "o:c")]
+    st = k2triples.from_string_triples(strs)
+    ds = delta.DynamicStore(st)
+    assert delta.view_of(ds) is None  # fresh store: pure static fast path
+
+    d = ds.dictionary
+    nid = d.add_term("zz:new")  # minted, nothing inserted
+    qid = d.add_predicate("zz:q")
+    assert ds.delta.empty
+    v = delta.view_of(ds)
+    assert v is not None and v.snap.empty and v.needs_sanitize
+
+    E = eng.Engine(store=ds)
+    cfg = ExecConfig(backend="jnp", cap=32)
+    px = d.encode_predicate("p:x")
+    sa = d.encode_subject("s:a")
+    # every shape carrying a minted constant answers empty/false
+    assert not bool(E.compile(TriplePatternQ(nid, px, sa), cfg)())
+    assert E.compile(TriplePatternQ(nid, px, None), cfg)().tolist() == []
+    assert E.compile(TriplePatternQ(None, px, nid), cfg)().tolist() == []
+    assert E.compile(TriplePatternQ(sa, qid, None), cfg)().tolist() == []
+    assert E.compile(TriplePatternQ(nid, None, None), cfg)() == {}
+    # static answers are untouched by the sanitizing view
+    sb = d.encode_object("s:b")
+    assert bool(E.compile(TriplePatternQ(sa, px, sb), cfg)())
+
+    # once the term actually lands, the same constants answer for real
+    ds.insert(nid, px, sa)
+    assert bool(E.compile(TriplePatternQ(nid, px, sa), cfg)())
+    assert E.compile(TriplePatternQ(nid, px, None), cfg)().tolist() == [sa]
 
 
 def test_dynamic_store_proxies_and_validates():

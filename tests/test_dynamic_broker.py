@@ -23,6 +23,7 @@ from repro.core import delta
 from repro.core import engine as eng
 from repro.core import k2triples
 from repro.core.query import ExecConfig
+from repro.launch import broker as broker_mod
 from repro.launch.broker import (
     CoalescePolicy, ServeBroker, TenantPolicy, WriteBudgetExhausted,
 )
@@ -147,6 +148,41 @@ def test_compaction_under_traffic(dyn_engine):
 
     st = asyncio.run(main())
     assert st["tenants"]["w"]["writes_resident"] < 12  # refilled at swap
+
+
+def test_compaction_failure_is_observed(dyn_engine, monkeypatch):
+    """A failing background compaction is surfaced when the task
+    completes — ``compaction_errors`` counter + RuntimeWarning — instead
+    of first at drain; the broker keeps serving the old epoch and the
+    delta keeps answering."""
+    E, T = dyn_engine
+    cfg = ExecConfig(backend="jnp", cap=64)
+
+    def boom(store, *, backend=None):
+        raise RuntimeError("rebuild exploded")
+
+    monkeypatch.setattr(broker_mod, "compact", boom)
+
+    async def main():
+        async with ServeBroker(
+            E, cfg, compaction=cpt.CompactionPolicy(max_delta=2),
+        ) as b:
+            with pytest.warns(RuntimeWarning, match="compaction failed"):
+                await b.submit_insert("w", 1, 1, 1)
+                await b.submit_insert("w", 1, 1, 2)  # trips the policy
+                assert b._compaction_task is not None
+                await asyncio.gather(
+                    b._compaction_task, return_exceptions=True
+                )
+                await asyncio.sleep(0)  # let the done callback land
+            st = b.stats()
+            assert st["compaction_errors"] == 1
+            assert st["compactions"] == 0
+            assert E.store.epoch == 0  # swap never happened
+            # reads keep flowing against the old epoch + live delta
+            assert await b.submit("r", eng.OP_CHECK, 1, 1, 1)
+
+    asyncio.run(main())
 
 
 def test_write_budget_exhausts_and_refills(dyn_engine):
